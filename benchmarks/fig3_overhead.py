@@ -1,0 +1,108 @@
+"""Fig. 3 — resource overhead of profiling vs number of profiled signals.
+
+Paper: BRAM/LUT/FF overhead per signal on ZCU102, 0→200+ signals.  Here the
+"resources" are (a) profile-word copies in the RINN dataflow (the paper's
+stream re-read/re-write cost) under the inline policy vs the shortcut
+optimization, and (b) compiled-HLO FLOPs/bytes deltas of an LM train step
+with profiling off / inline / shortcut as the layer count (≈ signal count)
+grows — the framework-scale Fig. 3.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo import analyze_hlo
+from repro.configs.base import ModelConfig
+from repro.core import plan_routing
+from repro.models import init_params
+from repro.models.api import loss_fn, make_batch, model_specs
+from repro.rinn import RinnConfig, generate_rinn, to_profiled_dag
+
+
+def rinn_word_copy_overhead() -> List[Dict]:
+    """Stream word-copies vs #signals, inline vs shortcut (paper's curve)."""
+    rows = []
+    for n in (4, 8, 16, 32, 64):
+        g = generate_rinn(RinnConfig(n_backbone=n, image_size=6, seed=1,
+                                     pattern="density", density=0.15))
+        dag = to_profiled_dag(g)
+        n_signals = sum(1 for node in dag.nodes if node.record_size)
+        inline = plan_routing(dag, policy="inline")
+        short = plan_routing(dag, policy="shortcut", shortcut_threshold=8)
+        rows.append({
+            "n_signals": n_signals,
+            "inline_word_copies": inline.word_copies,
+            "shortcut_word_copies": short.word_copies,
+            "inline_per_signal": inline.word_copies / max(1, n_signals),
+            "shortcut_per_signal": short.word_copies / max(1, n_signals),
+            "max_stream_inline": inline.max_stream_words,
+        })
+    return rows
+
+
+def _compile_cost(cfg: ModelConfig):
+    specs = model_specs(cfg)
+    params = init_params(specs, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 2, 32)
+    fn = jax.jit(lambda p, b: loss_fn(cfg, p, b))
+    compiled = fn.lower(params, batch).compile()
+    parsed = analyze_hlo(compiled.as_text())
+    return {"flops": parsed.flops, "bytes": parsed.memory_bytes}
+
+
+def lm_hlo_overhead() -> List[Dict]:
+    """Compiled train-graph cost with profiling off/inline/shortcut vs L."""
+    rows = []
+    for L in (2, 4, 8):
+        base = dict(
+            name=f"fig3-{L}", family="dense", n_layers=L, d_model=64,
+            n_heads=4, n_kv_heads=2, d_head=16, d_ff=128, vocab_size=256,
+            attn_impl="naive", loss_chunk=16)
+        costs = {}
+        for policy in ("off", "shortcut", "inline"):
+            cfg = ModelConfig(profile_policy=policy,
+                              scan_layers=(policy != "inline"), **base)
+            costs[policy] = _compile_cost(cfg)
+        n_signals = 3 * L  # act_rms, act_absmax, logit_max per layer
+        rows.append({
+            "n_layers": L,
+            "n_signals": n_signals,
+            "bytes_off": costs["off"]["bytes"],
+            "bytes_shortcut": costs["shortcut"]["bytes"],
+            "bytes_inline": costs["inline"]["bytes"],
+            "shortcut_overhead_bytes_per_signal":
+                (costs["shortcut"]["bytes"] - costs["off"]["bytes"])
+                / n_signals,
+            "inline_extra_bytes_vs_shortcut":
+                costs["inline"]["bytes"] - costs["shortcut"]["bytes"],
+            "flops_overhead_pct":
+                100 * (costs["shortcut"]["flops"] / max(costs["off"]["flops"], 1)
+                       - 1),
+        })
+    return rows
+
+
+def run() -> Dict:
+    out = {
+        "rinn_word_copies": rinn_word_copy_overhead(),
+        "lm_hlo_overhead": lm_hlo_overhead(),
+    }
+    print("\n== Fig3: profiling overhead vs #signals ==")
+    print(f"{'signals':>8} {'inline copies':>14} {'shortcut':>10} "
+          f"{'inline/sig':>11} {'shortcut/sig':>13}")
+    for r in out["rinn_word_copies"]:
+        print(f"{r['n_signals']:8d} {r['inline_word_copies']:14d} "
+              f"{r['shortcut_word_copies']:10d} "
+              f"{r['inline_per_signal']:11.1f} "
+              f"{r['shortcut_per_signal']:13.1f}")
+    print(f"\n{'L':>3} {'signals':>8} {'bytes off':>12} {'shortcut':>12} "
+          f"{'inline':>12} {'flops +%':>9}")
+    for r in out["lm_hlo_overhead"]:
+        print(f"{r['n_layers']:3d} {r['n_signals']:8d} "
+              f"{r['bytes_off']:12.3e} {r['bytes_shortcut']:12.3e} "
+              f"{r['bytes_inline']:12.3e} {r['flops_overhead_pct']:9.3f}")
+    return out

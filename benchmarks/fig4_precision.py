@@ -1,0 +1,79 @@
+"""Fig. 4 — profile-word precision sweep.
+
+Paper: ap_fixed<W,W> profile words, W swept; W < 6 overflows because the max
+observed FIFO depth is 66; resource cost scales with W.  Here: (a) the
+fixed-point codec against REAL simulated FIFO depths — finding the minimal
+safe bitwidth, (b) buffer bytes of the LM profile tape across record dtypes.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FLOAT_FORMATS, FixedPointCodec
+from repro.rinn import RinnConfig, ZCU102, cosim_only, generate_rinn
+
+
+def bitwidth_sweep() -> Dict:
+    g = generate_rinn(RinnConfig(n_backbone=7, image_size=8, seed=11,
+                                 pattern="long_skip", density=0.5))
+    res = cosim_only(g, ZCU102)
+    depths = np.array(sorted(res.fifo_max.values()))
+    max_depth = int(depths.max())
+    rows = []
+    for bits in range(3, 17):
+        codec = FixedPointCodec(total_bits=bits)
+        overflows = int(np.sum([bool(codec.overflows(float(d)))
+                                for d in depths]))
+        rows.append({
+            "bits": bits,
+            "storage_bytes_per_word": codec.storage_bytes_per_word,
+            "representable_max": codec.max_value,
+            "overflowing_signals": overflows,
+            "safe": overflows == 0,
+        })
+    min_safe = next(r["bits"] for r in rows if r["safe"])
+    return {"max_observed_depth": max_depth, "rows": rows,
+            "min_safe_bits": min_safe}
+
+
+def dtype_sweep() -> List[Dict]:
+    """Tape buffer bytes per step for an LM under each record dtype."""
+    from repro.configs.base import ModelConfig
+    from repro.models.transformer import tape_spec_for
+    rows = []
+    for name, dtype in list(FLOAT_FORMATS.items()):
+        cfg = ModelConfig(
+            name="fig4", family="moe", n_layers=48, d_model=64, n_heads=4,
+            n_kv_heads=2, d_head=16, d_ff=128, vocab_size=256, n_experts=64,
+            top_k=6, profile_dtype=name if name != "float8_e4m3" else "float32")
+        spec = tape_spec_for(cfg)
+        words = spec.width * cfg.n_layers
+        rows.append({
+            "dtype": name,
+            "bytes_per_word": jnp.dtype(dtype).itemsize,
+            "tape_words_per_step": words,
+            "tape_bytes_per_step": words * jnp.dtype(dtype).itemsize,
+        })
+    return rows
+
+
+def run() -> Dict:
+    bits = bitwidth_sweep()
+    dtypes = dtype_sweep()
+    print("\n== Fig4: profile-word precision ==")
+    print(f"max observed FIFO depth: {bits['max_observed_depth']} "
+          f"(paper: 66) -> min safe bits = {bits['min_safe_bits']} "
+          f"(paper: ~6-7)")
+    print(f"{'bits':>5} {'bytes/word':>11} {'max value':>12} {'overflows':>10}")
+    for r in bits["rows"]:
+        print(f"{r['bits']:5d} {r['storage_bytes_per_word']:11d} "
+              f"{r['representable_max']:12.0f} {r['overflowing_signals']:10d}")
+    print(f"\n{'record dtype':>14} {'bytes/word':>11} {'tape bytes/step':>16}")
+    for r in dtypes:
+        print(f"{r['dtype']:>14} {r['bytes_per_word']:11d} "
+              f"{r['tape_bytes_per_step']:16d}")
+    return {"bitwidth": bits, "dtypes": dtypes}

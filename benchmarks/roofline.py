@@ -1,0 +1,112 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads artifacts/dryrun/*.json, computes the three per-chip roofline terms
+(compute / memory / collective), the dominant bottleneck, the useful-FLOPs
+ratio (MODEL_FLOPS / HLO_FLOPs), and the roofline-bound MFU per (arch ×
+cell × mesh).  Renders the markdown table EXPERIMENTS.md embeds and picks
+hillclimb candidates.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.analysis.roofline import RooflineTerms, from_artifact, model_flops
+from repro.configs import cell_by_name, get_config
+
+ART_DIR = Path("artifacts/dryrun")
+
+
+def load_artifacts(mesh: str = "single", variant: str = "base") -> List[Dict]:
+    arts = []
+    for p in sorted(ART_DIR.glob(f"*__{mesh}__{variant}.json")):
+        d = json.loads(p.read_text())
+        arts.append(d)
+    return arts
+
+
+def terms_for(art: Dict) -> Optional[RooflineTerms]:
+    if art.get("status") != "ok":
+        return None
+    cfg = get_config(art["arch"])
+    cell = cell_by_name(art["cell"])
+    return from_artifact(art, cfg, cell)
+
+
+def render_table(arts: List[Dict]) -> str:
+    lines = [
+        "| arch | cell | chips | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+        "bottleneck | useful | MFU-bound | HBM GiB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for art in arts:
+        if art.get("status") == "skipped":
+            lines.append(
+                f"| {art['arch']} | {art['cell']} | — | — | — | — | "
+                f"skipped | — | — | — |")
+            continue
+        t = terms_for(art)
+        if t is None:
+            lines.append(f"| {art['arch']} | {art['cell']} | — | ERROR |")
+            continue
+        hbm = art["memory_analysis"]["temp_bytes"] / 2**30
+        lines.append(
+            f"| {t.arch} | {t.cell} | {t.chips} | "
+            f"{t.t_compute*1e3:.2f} | {t.t_memory*1e3:.2f} | "
+            f"{t.t_collective*1e3:.2f} | {t.bottleneck} | "
+            f"{t.useful_ratio:.2f} | {t.mfu_bound:.3f} | {hbm:.1f} |")
+    return "\n".join(lines)
+
+
+def pick_hillclimb(arts: List[Dict]) -> Dict[str, Dict]:
+    """worst roofline fraction / most collective-bound / SPRING-representative."""
+    scored = []
+    for art in arts:
+        t = terms_for(art)
+        if t is None:
+            continue
+        scored.append((art, t))
+    worst_mfu = min(
+        (x for x in scored if x[1].t_compute > 1e-6),
+        key=lambda x: x[1].mfu_bound)
+    most_coll = max(
+        scored, key=lambda x: x[1].t_collective /
+        max(x[1].step_time, 1e-12))
+    # most representative of the paper's technique: the MoE cell with the
+    # expert-buffer (FIFO) profiling in the hot path — biggest MoE trainer
+    moe = [x for x in scored
+           if get_config(x[0]["arch"]).family == "moe"
+           and x[0]["cell"] == "train_4k"]
+    rep = max(moe, key=lambda x: x[1].flops_per_chip) if moe else scored[0]
+    return {
+        "worst_roofline_fraction": worst_mfu[0],
+        "most_collective_bound": most_coll[0],
+        "most_spring_representative": rep[0],
+    }
+
+
+def run() -> Dict:
+    arts = load_artifacts("single")
+    multi = load_artifacts("multi")
+    if not arts:
+        print("\n== Roofline: no dry-run artifacts found ==")
+        return {"table": "", "cells": 0}
+    table = render_table(arts)
+    print("\n== Roofline (single-pod 16x16, per chip) ==")
+    print(table)
+    ok = [a for a in arts if a.get("status") == "ok"]
+    sk = [a for a in arts if a.get("status") == "skipped"]
+    print(f"\n{len(ok)} cells ok, {len(sk)} skipped "
+          f"(single); multi-pod: "
+          f"{sum(1 for a in multi if a.get('status') == 'ok')} ok")
+    picks = pick_hillclimb(arts)
+    print("hillclimb candidates:")
+    for why, art in picks.items():
+        print(f"  {why}: {art['arch']} x {art['cell']}")
+    return {
+        "table": table,
+        "cells": len(arts),
+        "picks": {k: f"{v['arch']}|{v['cell']}" for k, v in picks.items()},
+        "rows": [terms_for(a).row() for a in ok],
+    }

@@ -1,0 +1,45 @@
+"""The paper's one-click flow: generate RINNs -> profile -> analyze patterns.
+
+Sweeps the §III.C factors on a small RINN family and prints the FIFO-sizing
+guidance table the paper derives (which depths recur, what long skips cost).
+
+  PYTHONPATH=src python examples/rinn_profile.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.rinn import RinnConfig, ZCU102, PYNQ_Z2, compare, cosim_only, generate_rinn
+
+
+def main():
+    print("=== complexity sweep (paper Fig. 5) ===")
+    for n in (3, 5, 7):
+        g = generate_rinn(RinnConfig(n_backbone=n, image_size=8, seed=11,
+                                     pattern="long_skip", density=0.4))
+        res = cosim_only(g, ZCU102)
+        depths = sorted(set(res.fifo_max.values()), reverse=True)[:5]
+        print(f"  n_backbone={n}: recurring depths {depths}")
+
+    print("=== kernel-size sweep (paper §III.C.5) ===")
+    for k in (2, 3, 5):
+        g = generate_rinn(RinnConfig(n_backbone=5, image_size=8, kernel=k,
+                                     seed=3, pattern="long_skip"))
+        res = cosim_only(g, ZCU102)
+        print(f"  kernel={k}: max fullness {max(res.fifo_max.values())}")
+
+    print("=== board comparison (paper §III.C.2) ===")
+    g = generate_rinn(RinnConfig(n_backbone=5, image_size=8, seed=4,
+                                 density=0.4))
+    for name, board in (("zcu102", ZCU102), ("pynq_z2", PYNQ_Z2)):
+        res = cosim_only(g, board)
+        print(f"  {name}: cycles={res.cycles} "
+              f"max_fifo={max(res.fifo_max.values())}")
+
+    print("=== cosim vs in-band profiled (paper Table I) ===")
+    rep = compare(g, ZCU102)
+    print(rep.table())
+
+
+if __name__ == "__main__":
+    main()

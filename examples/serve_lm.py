@@ -1,0 +1,24 @@
+"""Batched serving example: prefill + greedy decode with KV profiling.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch qwen2.5-14b
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+    serve_mod.main(["--arch", args.arch, "--reduced",
+                    "--batch", str(args.batch),
+                    "--prompt-len", "16", "--gen", "16"])
+
+
+if __name__ == "__main__":
+    main()

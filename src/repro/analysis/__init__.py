@@ -1,0 +1,3 @@
+from .hlo import HloCost, analyze_hlo, parse_computations
+from .roofline import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16, RooflineTerms,
+                       from_artifact, model_flops)

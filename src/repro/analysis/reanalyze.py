@@ -1,0 +1,42 @@
+"""Re-parse saved dry-run HLO (after parser improvements) without recompiling.
+
+  PYTHONPATH=src python -m repro.analysis.reanalyze artifacts/dryrun
+"""
+import gzip
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.hlo import analyze_hlo
+
+
+def main():
+    art_dir = Path(sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun")
+    n = 0
+    for j in sorted(art_dir.glob("*.json")):
+        hlo = j.with_suffix("").with_suffix("")  # strip .json
+        hlo = art_dir / (j.stem + ".hlo.txt.gz")
+        if not hlo.exists():
+            continue
+        d = json.loads(j.read_text())
+        if d.get("status") != "ok":
+            continue
+        with gzip.open(hlo, "rt") as f:
+            parsed = analyze_hlo(f.read())
+        d["parsed"] = {
+            "flops": parsed.flops,
+            "memory_bytes": parsed.memory_bytes,
+            "collective_bytes": parsed.collective_bytes,
+            "collective_ops": parsed.collective_ops,
+            "while_trip_counts": parsed.while_trip_counts,
+            "n_computations": parsed.n_computations,
+        }
+        j.write_text(json.dumps(d, indent=1))
+        n += 1
+        print(f"re-analyzed {j.name}: flops={parsed.flops:.3e} "
+              f"mem={parsed.memory_bytes:.3e}")
+    print(f"done: {n} artifacts updated")
+
+
+if __name__ == "__main__":
+    main()

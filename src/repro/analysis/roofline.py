@@ -1,0 +1,120 @@
+"""Three-term roofline model for TPU v5e (target hardware; CPU is the host).
+
+    compute term    = HLO_FLOPs(per chip)      / peak_FLOP/s
+    memory term     = HLO_bytes(per chip)      / HBM_bw
+    collective term = collective_bytes(per chip) / link_bw
+
+All inputs come from the compiled dry-run artifact (parsed HLO; shapes are
+per-device post-SPMD).  ``MODEL_FLOPS = 6·N·D`` (dense) or ``6·N_active·D``
+(MoE) gives the useful-compute yardstick; its ratio against compiled HLO
+FLOPs exposes remat/dispatch/attention overheads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (~per chip, one direction)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    cell: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    mem_bytes_per_chip: float
+    coll_bytes_per_chip: float
+    model_flops_global: float          # 6·N(,active)·D tokens yardstick
+    tokens_global: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.mem_bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """No-overlap roofline estimate (sum) — conservative."""
+        return self.t_compute + self.t_memory + self.t_collective
+
+    @property
+    def step_time_overlapped(self) -> float:
+        """Perfect-overlap roofline estimate (max) — optimistic."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_per_chip(self) -> float:
+        return self.model_flops_global / max(1, self.chips)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        if self.flops_per_chip <= 0:
+            return 0.0
+        return self.useful_flops_per_chip / self.flops_per_chip
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-flops utilization at the (overlapped) roofline bound."""
+        t = self.step_time_overlapped
+        if t <= 0:
+            return 0.0
+        return self.useful_flops_per_chip / (t * PEAK_FLOPS_BF16)
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "cell": self.cell, "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_ratio": self.useful_ratio,
+            "mfu_bound": self.mfu_bound,
+            "flops_per_chip": self.flops_per_chip,
+            "mem_bytes_per_chip": self.mem_bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+        }
+
+
+def model_flops(cfg, cell) -> float:
+    """6·N·D for training, 2·N·D for a single forward token batch."""
+    n = cfg.param_count(active_only=(cfg.family == "moe"))
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * cell.global_batch
+
+
+def from_artifact(art: Dict, cfg, cell) -> RooflineTerms:
+    return RooflineTerms(
+        arch=art["arch"], cell=art["cell"], mesh=art["mesh"],
+        chips=art["chips"],
+        flops_per_chip=art["parsed"]["flops"],
+        mem_bytes_per_chip=art["parsed"]["memory_bytes"],
+        coll_bytes_per_chip=sum(art["parsed"]["collective_bytes"].values()),
+        model_flops_global=model_flops(cfg, cell),
+        tokens_global=(cell.global_batch * cell.seq_len
+                       if cell.kind != "decode" else cell.global_batch),
+    )

@@ -1,0 +1,11 @@
+"""Architecture configs: the ten assigned archs + shape cells."""
+from .base import (
+    FAMILIES, SHAPE_CELLS, ModelConfig, ShapeCell, cell_applicable,
+    cell_by_name,
+)
+from .registry import ARCH_IDS, all_configs, get_config
+
+__all__ = [
+    "FAMILIES", "SHAPE_CELLS", "ModelConfig", "ShapeCell", "cell_applicable",
+    "cell_by_name", "ARCH_IDS", "all_configs", "get_config",
+]

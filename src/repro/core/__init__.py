@@ -1,0 +1,22 @@
+"""SPRING core: in-band profiling stream for JAX dataflow programs.
+
+The paper's primary contribution — a profiling stream that flows alongside
+the data stream, splitting/merging in synchrony with the dataflow, with a
+statically predetermined label schema — implemented as a composable JAX
+module (see DESIGN.md §2 for the FPGA→TPU mapping).
+"""
+from .stream import Label, PLACEHOLDER, ProfileStream, placeholder_label, validate_policy
+from .tape import TapeSpec, concat_streams_and_rows, rows_to_stream
+from .codec import FLOAT_FORMATS, FixedPointCodec
+from .collector import ProfileCollector, SignalAggregate
+from .policies import DagNode, ProfiledDag, RoutingPlan, plan_routing
+from . import metrics
+
+__all__ = [
+    "Label", "PLACEHOLDER", "ProfileStream", "placeholder_label", "validate_policy",
+    "TapeSpec", "concat_streams_and_rows", "rows_to_stream",
+    "FLOAT_FORMATS", "FixedPointCodec",
+    "ProfileCollector", "SignalAggregate",
+    "DagNode", "ProfiledDag", "RoutingPlan", "plan_routing",
+    "metrics",
+]

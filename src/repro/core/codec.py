@@ -1,0 +1,95 @@
+"""Profile-word precision control — the ``ap_fixed<W,I>`` sweep (paper Fig. 4).
+
+The paper stores profile words as ``ap_fixed<W,I>`` and sweeps W to trade
+resource overhead against overflow risk: with max observed FIFO depth 66,
+bitwidths below ~6 overflow.  On TPU the analogue is the record dtype of the
+tape/stream buffer (f32 / bf16 / f16 / f8) plus an emulated fixed-point codec
+for integer-valued metrics, which reproduces the paper's overflow cliff
+exactly (saturating quantization).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# dtypes usable directly as the stream/tape buffer element type.
+FLOAT_FORMATS = {
+    "float32": jnp.float32,
+    "bfloat16": jnp.bfloat16,
+    "float16": jnp.float16,
+    "float8_e4m3": jnp.float8_e4m3fn,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPointCodec:
+    """Saturating signed fixed-point ``ap_fixed<total_bits, int_bits>``.
+
+    ``encode`` quantizes to the grid and saturates; ``decode`` returns the
+    dequantized float.  ``total_bits == int_bits`` gives the paper's pure
+    integer profile words.  Storage container is chosen from total_bits so
+    the *bytes moved* by the profile path scale the way the paper's BRAM/FF
+    cost does.
+    """
+
+    total_bits: int
+    int_bits: Optional[int] = None  # defaults to total_bits (pure integer)
+
+    def __post_init__(self):
+        if not (2 <= self.total_bits <= 32):
+            raise ValueError("total_bits must be in [2, 32]")
+        ib = self.total_bits if self.int_bits is None else self.int_bits
+        if ib > self.total_bits:
+            raise ValueError("int_bits cannot exceed total_bits")
+
+    @property
+    def _int_bits(self) -> int:
+        return self.total_bits if self.int_bits is None else self.int_bits
+
+    @property
+    def frac_bits(self) -> int:
+        return self.total_bits - self._int_bits
+
+    @property
+    def scale(self) -> float:
+        return float(2 ** self.frac_bits)
+
+    @property
+    def max_value(self) -> float:
+        return (2 ** (self.total_bits - 1) - 1) / self.scale
+
+    @property
+    def min_value(self) -> float:
+        return -(2 ** (self.total_bits - 1)) / self.scale
+
+    @property
+    def storage_dtype(self):
+        if self.total_bits <= 8:
+            return jnp.int8
+        if self.total_bits <= 16:
+            return jnp.int16
+        return jnp.int32
+
+    @property
+    def storage_bytes_per_word(self) -> int:
+        return jnp.dtype(self.storage_dtype).itemsize
+
+    def encode(self, x: jnp.ndarray) -> jnp.ndarray:
+        q = jnp.round(jnp.asarray(x, jnp.float32) * self.scale)
+        q = jnp.clip(q, -(2 ** (self.total_bits - 1)), 2 ** (self.total_bits - 1) - 1)
+        return q.astype(self.storage_dtype)
+
+    def decode(self, q: jnp.ndarray) -> jnp.ndarray:
+        return q.astype(jnp.float32) / self.scale
+
+    def roundtrip(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Quantize-dequantize; saturation makes overflow observable."""
+        return self.decode(self.encode(x))
+
+    def overflows(self, x) -> jnp.ndarray:
+        """True where the value cannot be represented (paper's Fig. 4 cliff)."""
+        x = jnp.asarray(x, jnp.float32)
+        return (x > self.max_value) | (x < self.min_value)

@@ -1,0 +1,77 @@
+"""Metric taps appended to the in-band stream.
+
+The paper's metric is FIFO fullness sampled at read time (Listing 1:
+``data.size()`` inside a ``protocol fixed`` region, folded with a running
+max).  At TPU scale the system's real logical queues play the FIFO role:
+
+  * MoE expert capacity buffers — tokens queued per expert vs capacity, plus
+    overflow (dropped-token) counts: a literal fullness/overflow metric;
+  * KV-cache occupancy during serving;
+  * grad-accumulation microbatch progress;
+
+plus generic signal-monitoring taps (activation RMS / absmax, attention
+logit max) standing in for the paper's "over 200 internal signals".
+
+All taps are cheap reductions; everything returns small 1-D vectors ready to
+``ProfileStream.append`` / ``TapeSpec.emit``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def act_rms(x: jnp.ndarray) -> jnp.ndarray:
+    """Root-mean-square of an activation tensor (1 word)."""
+    return jnp.sqrt(jnp.mean(jnp.square(x.astype(jnp.float32))) + 1e-30)[None]
+
+
+def act_absmax(x: jnp.ndarray) -> jnp.ndarray:
+    """Max |activation| (1 word) — numerical-health signal."""
+    return jnp.max(jnp.abs(x.astype(jnp.float32)))[None]
+
+
+def logit_max(scores: jnp.ndarray) -> jnp.ndarray:
+    """Max attention logit (1 word) — overflow sentinel for softmax."""
+    return jnp.max(scores.astype(jnp.float32))[None]
+
+
+def expert_fullness(
+    expert_counts: jnp.ndarray, capacity: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """MoE expert-buffer fullness — the FIFO-fullness metric at scale.
+
+    Args:
+      expert_counts: [E] tokens routed to each expert this step.
+      capacity: per-expert buffer capacity.
+
+    Returns:
+      fullness: [E] occupancy in tokens, saturated at capacity (what the
+        buffer actually held — FIFO fullness);
+      overflow: [E] tokens that found the buffer full (dropped/overflowed).
+    """
+    counts = expert_counts.astype(jnp.float32)
+    cap = jnp.float32(capacity)
+    fullness = jnp.minimum(counts, cap)
+    overflow = jnp.maximum(counts - cap, 0.0)
+    return fullness, overflow
+
+
+def kv_occupancy(used_positions: jnp.ndarray, cache_len: int) -> jnp.ndarray:
+    """KV-cache fullness in positions (1 word per sequence or scalar)."""
+    used = jnp.max(used_positions.astype(jnp.float32))
+    return jnp.stack([used, jnp.float32(cache_len)])
+
+
+def grad_global_norm(grads) -> jnp.ndarray:
+    """Global L2 norm of a gradient pytree (1 word)."""
+    leaves = jax.tree_util.tree_leaves(grads)
+    sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    return jnp.sqrt(sq + 1e-30)[None]
+
+
+def running_max(prev: jnp.ndarray, new: jnp.ndarray) -> jnp.ndarray:
+    """The paper's ``if (max_depth < ffsize) max_depth = ffsize`` register."""
+    return jnp.maximum(prev, new)

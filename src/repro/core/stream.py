@@ -1,0 +1,214 @@
+"""In-band profiling stream — the paper's core contribution, in JAX.
+
+SPRING threads a profiling stream *alongside* the data stream through a
+streaming dataflow graph (paper §II.A, Listing 1):
+
+  * each module reads the incoming profile stream and APPENDS its locally
+    collected metric words to the end;
+  * when the data stream SPLITS (clone), all profiling data follows the
+    first output branch; every other branch starts a fresh stream holding a
+    single PLACEHOLDER word;
+  * when data streams MERGE, the first input's profile words are written to
+    the output first, then the second's, and so on — deterministic order;
+  * the label schema is STATICALLY predetermined, so the host (PS side)
+    decodes the arriving flat word stream positionally.
+
+Here the stream is a JAX pytree whose single dynamic leaf is a flat 1-D
+``data`` vector of profile words, and whose static aux data is the label
+schema.  Appending is functionally pure; the schema grows at *trace time*
+(Python), satisfying the paper's own constraint that "the number of profiled
+values per signal must be statically known".
+
+Two collection policies mirror the paper:
+
+  * ``inline``   — the faithful mechanism: the carried stream physically
+                   grows (``jnp.concatenate``) through the layer stack.  Each
+                   downstream module re-reads and re-writes every upstream
+                   word — the O(L²) copy inefficiency the paper calls out in
+                   §III.A ("repeatedly read and written by subsequent
+                   layers").
+  * ``shortcut`` — the paper's proposed optimization (§II.A, §IV future
+                   work): sufficiently long streams bypass intermediate
+                   modules straight to the final merge.  In JAX this is
+                   realized with ``lax.scan`` ys / pre-laid-out buffers: each
+                   layer emits a fixed-width record row directly into its
+                   final resting place — O(L) copies.  See ``tape.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Placeholder word written into the fresh stream of a non-primary split
+# branch (paper: "the second output stream is initialized with a placeholder
+# value").
+PLACEHOLDER = -1.0
+
+_VALID_POLICIES = ("off", "inline", "shortcut")
+
+
+@dataclasses.dataclass(frozen=True)
+class Label:
+    """Semantic tag for a contiguous run of words in the profile stream.
+
+    Mirrors the paper's "predetermined output profiling label list": the
+    host decodes the flat stream purely positionally from these.
+    """
+
+    name: str            # e.g. "block3/moe/expert_fullness"
+    metric: str          # e.g. "fifo_fullness", "act_rms", "placeholder"
+    size: int            # number of words this label occupies
+
+    def __post_init__(self):
+        if self.size < 1:
+            raise ValueError(f"Label {self.name!r}: size must be >= 1")
+
+
+def placeholder_label(branch: int) -> Label:
+    return Label(name=f"__placeholder_b{branch}__", metric="placeholder", size=1)
+
+
+@jax.tree_util.register_pytree_node_class
+class ProfileStream:
+    """A flat in-band stream of profile words with a static label schema."""
+
+    __slots__ = ("data", "schema")
+
+    def __init__(self, data: jnp.ndarray, schema: Tuple[Label, ...]):
+        self.data = data
+        self.schema = tuple(schema)
+
+    # ------------------------------------------------------------------ #
+    # pytree plumbing — ``data`` is the only dynamic leaf.
+    # ------------------------------------------------------------------ #
+    def tree_flatten(self):
+        return (self.data,), self.schema
+
+    @classmethod
+    def tree_unflatten(cls, schema, children):
+        (data,) = children
+        return cls(data, schema)
+
+    # ------------------------------------------------------------------ #
+    # construction
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def create(cls, dtype=jnp.float32) -> "ProfileStream":
+        """An empty stream (the profile input fed at the IP-core boundary)."""
+        return cls(jnp.zeros((0,), dtype=dtype), ())
+
+    @classmethod
+    def placeholder(cls, dtype=jnp.float32, branch: int = 1) -> "ProfileStream":
+        """Fresh stream for a non-primary split branch: one placeholder word."""
+        return cls(
+            jnp.full((1,), PLACEHOLDER, dtype=dtype),
+            (placeholder_label(branch),),
+        )
+
+    # ------------------------------------------------------------------ #
+    # properties
+    # ------------------------------------------------------------------ #
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    @property
+    def n_words(self) -> int:
+        return int(sum(l.size for l in self.schema))
+
+    @property
+    def n_signals(self) -> int:
+        """Number of non-placeholder labels (paper counts 'profiled signals')."""
+        return sum(1 for l in self.schema if l.metric != "placeholder")
+
+    def __repr__(self):
+        return (
+            f"ProfileStream(words={self.n_words}, signals={self.n_signals}, "
+            f"dtype={self.data.dtype})"
+        )
+
+    # ------------------------------------------------------------------ #
+    # the three SPRING stream operations
+    # ------------------------------------------------------------------ #
+    def append(self, name: str, metric: str, values) -> "ProfileStream":
+        """Module appends its locally collected words to the stream's end.
+
+        ``values`` may be scalar or 1-D.  Gradients are stopped: profiling
+        must not perturb the function being profiled (the in-band analogue
+        of the paper's requirement that the profile path not corrupt the
+        datapath — interference is studied separately in the simulator).
+        """
+        values = jnp.atleast_1d(jnp.asarray(values))
+        if values.ndim != 1:
+            values = values.reshape(-1)
+        values = jax.lax.stop_gradient(values).astype(self.dtype)
+        label = Label(name=name, metric=metric, size=int(values.shape[0]))
+        return ProfileStream(
+            jnp.concatenate([self.data, values]), self.schema + (label,)
+        )
+
+    def split(self, n: int) -> Tuple["ProfileStream", ...]:
+        """Stream split in synchrony with a data-stream split (clone).
+
+        Branch 0 carries all existing profile words; branches 1..n-1 are
+        initialized with a placeholder word each (paper §II.A).
+        """
+        if n < 1:
+            raise ValueError("split requires n >= 1")
+        out = [self]
+        for b in range(1, n):
+            out.append(ProfileStream.placeholder(dtype=self.dtype, branch=b))
+        return tuple(out)
+
+    @staticmethod
+    def merge(*streams: "ProfileStream") -> "ProfileStream":
+        """Stream merge in synchrony with a data merge: input 0 first, then 1…"""
+        if not streams:
+            raise ValueError("merge requires at least one stream")
+        dtype = streams[0].dtype
+        data = jnp.concatenate([s.data.astype(dtype) for s in streams])
+        schema: Tuple[Label, ...] = ()
+        for s in streams:
+            schema = schema + s.schema
+        return ProfileStream(data, schema)
+
+    # ------------------------------------------------------------------ #
+    # host-side (PS-side) decode
+    # ------------------------------------------------------------------ #
+    def label_list(self) -> Tuple[Label, ...]:
+        """The predetermined output profiling label list."""
+        return self.schema
+
+    def decode(self) -> Dict[str, np.ndarray]:
+        """Positional decode of the flat word stream into {label: values}.
+
+        Runs host-side on concrete arrays (the PS-side interpretation step).
+        Placeholder words are dropped, like the paper's post-processing.
+        """
+        arr = np.asarray(jax.device_get(self.data), dtype=np.float64)
+        out: Dict[str, np.ndarray] = {}
+        cursor = 0
+        for label in self.schema:
+            words = arr[cursor : cursor + label.size]
+            cursor += label.size
+            if label.metric == "placeholder":
+                continue
+            if label.name in out:  # same site profiled twice (e.g. two steps)
+                out[label.name] = np.concatenate([out[label.name], words])
+            else:
+                out[label.name] = words
+        if cursor != arr.shape[0]:
+            raise ValueError(
+                f"schema covers {cursor} words but stream has {arr.shape[0]}"
+            )
+        return out
+
+
+def validate_policy(policy: str) -> str:
+    if policy not in _VALID_POLICIES:
+        raise ValueError(f"policy must be one of {_VALID_POLICIES}, got {policy!r}")
+    return policy

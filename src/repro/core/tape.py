@@ -1,0 +1,85 @@
+"""Shortcut-policy collection: fixed-width per-layer records via ``lax.scan`` ys.
+
+The paper identifies the inline stream's inefficiency — every profile word is
+re-read and re-written by each subsequent layer (O(L²) word copies) — and
+proposes forwarding long streams directly to the dataflow's final merge
+(§II.A / §IV future work).  On TPU the natural realization is: each scanned
+layer emits a fixed-width record row as a ``lax.scan`` *ys* output, which XLA
+lays out directly into the final `[L, width]` buffer — each word is written
+exactly once (O(L)).
+
+``TapeSpec`` is the static per-layer schema template; after the scan the
+stacked rows are rebound into a flat :class:`ProfileStream` whose label list
+is the per-layer template unrolled over layers — so host-side decoding is
+identical to the inline policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .stream import Label, ProfileStream
+
+
+@dataclasses.dataclass(frozen=True)
+class TapeSpec:
+    """Static description of one layer's record row."""
+
+    labels: Tuple[Label, ...]
+
+    @property
+    def width(self) -> int:
+        return sum(l.size for l in self.labels)
+
+    def offsets(self) -> Dict[str, Tuple[int, int]]:
+        out, cur = {}, 0
+        for l in self.labels:
+            out[l.name] = (cur, cur + l.size)
+            cur += l.size
+        return out
+
+    def emit(self, values: Dict[str, jnp.ndarray], dtype=jnp.float32) -> jnp.ndarray:
+        """Pack one layer's metric values into a single record row.
+
+        Missing labels are filled with the placeholder value so the row width
+        is always static (e.g. a metric that only exists in some layers of a
+        hybrid model).
+        """
+        parts = []
+        for l in self.labels:
+            if l.name in values:
+                v = jnp.atleast_1d(jnp.asarray(values[l.name])).reshape(-1)
+                if v.shape[0] != l.size:
+                    raise ValueError(
+                        f"tape label {l.name!r} expects {l.size} words, got {v.shape[0]}"
+                    )
+                parts.append(jax.lax.stop_gradient(v).astype(dtype))
+            else:
+                parts.append(jnp.full((l.size,), -1.0, dtype=dtype))
+        return jnp.concatenate(parts) if parts else jnp.zeros((0,), dtype)
+
+
+def rows_to_stream(
+    spec: TapeSpec, rows: jnp.ndarray, layer_prefix: str = "layer"
+) -> ProfileStream:
+    """Bind stacked scan ys ``rows: [L, width]`` into a flat ProfileStream."""
+    if rows.ndim != 2 or rows.shape[1] != spec.width:
+        raise ValueError(f"rows shape {rows.shape} != [L, {spec.width}]")
+    n_layers = rows.shape[0]
+    schema = []
+    for i in range(n_layers):
+        for l in spec.labels:
+            schema.append(
+                Label(name=f"{layer_prefix}{i}/{l.name}", metric=l.metric, size=l.size)
+            )
+    return ProfileStream(rows.reshape(-1), tuple(schema))
+
+
+def concat_streams_and_rows(
+    head: ProfileStream, spec: TapeSpec, rows: jnp.ndarray, tail: ProfileStream
+) -> ProfileStream:
+    """Final-merge assembly: head (pre-scan) words, scanned rows, tail words."""
+    return ProfileStream.merge(head, rows_to_stream(spec, rows), tail)

@@ -1,0 +1,121 @@
+"""Deterministic synthetic data pipeline with host-sharded batching.
+
+Production posture: each host materializes only its shard of the global
+batch (``host_slice``), batches are derived from (seed, step) so any step is
+reproducible from scratch — which is what makes checkpoint-restart and
+elastic rescaling exact: a restarted (or re-sharded) job regenerates batch
+``k`` bit-identically without data-loader state.
+
+A background prefetch thread keeps a bounded queue of ready batches; the
+queue depth is exported as a SPRING profile signal (the host-side FIFO).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 1234
+    global_batch: int = 32
+    seq_len: int = 256
+    vocab_size: int = 256
+    n_hosts: int = 1
+    host_id: int = 0
+    prefetch: int = 2
+    # synthetic task: noisy affine-recurrence tokens (learnable structure)
+    pattern_order: int = 3
+    noise: float = 0.05
+
+
+def _batch_rng(cfg: DataConfig, step: int) -> np.random.Generator:
+    return np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, step, 0xD00D]))
+
+
+def host_slice(cfg: DataConfig):
+    per_host = cfg.global_batch // cfg.n_hosts
+    lo = cfg.host_id * per_host
+    return slice(lo, lo + per_host)
+
+
+def synth_batch(cfg: DataConfig, step: int) -> Dict[str, np.ndarray]:
+    """Global batch for ``step`` (deterministic); host takes its slice.
+
+    Tokens follow a learnable k-th order recurrence over the vocab with
+    noise — cross-entropy decreases under training, unlike pure iid noise.
+    """
+    rng = _batch_rng(cfg, step)
+    B, S, V = cfg.global_batch, cfg.seq_len, cfg.vocab_size
+    k = cfg.pattern_order
+    coef = rng.integers(1, V, size=(k,))
+    toks = np.zeros((B, S), np.int64)
+    toks[:, :k] = rng.integers(0, V, size=(B, k))
+    for t in range(k, S):
+        nxt = (toks[:, t - k:t] * coef[None, :]).sum(axis=1) % V
+        flip = rng.random(B) < cfg.noise
+        nxt = np.where(flip, rng.integers(0, V, size=B), nxt)
+        toks[:, t] = nxt
+    labels = np.roll(toks, -1, axis=1)
+    labels[:, -1] = -1  # masked position
+    sl = host_slice(cfg)
+    return {"tokens": toks[sl].astype(np.int32),
+            "labels": labels[sl].astype(np.int32)}
+
+
+class Prefetcher:
+    """Bounded background prefetch queue (the host-side FIFO SPRING watches)."""
+
+    def __init__(self, cfg: DataConfig, start_step: int = 0):
+        self.cfg = cfg
+        self._q: "queue.Queue" = queue.Queue(maxsize=cfg.prefetch)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._depth_max = 0
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = synth_batch(self.cfg, step)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def get(self):
+        self._depth_max = max(self._depth_max, self._q.qsize())
+        step, batch = self._q.get()
+        return step, batch
+
+    @property
+    def queue_fullness(self) -> int:
+        """SPRING host-side FIFO fullness signal."""
+        return self._depth_max
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2)
+
+
+def batches(cfg: DataConfig, start_step: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+    step = start_step
+    while True:
+        yield synth_batch(cfg, step)
+        step += 1

@@ -1,0 +1,62 @@
+"""Wire-level compressed gradient collectives (shard_map building block).
+
+``TrainConfig.compress_grads`` quantizes gradient VALUES (error-feedback
+emulation) but the implicit GSPMD all-reduce still moves bf16/f32 on the
+wire.  This module provides the explicit, wire-level version for the
+cross-pod (DCN) hop: each shard quantizes its local gradient to int8 with a
+per-tensor scale, all-gathers the *int8 payload* (+ f32 scales), and
+averages after dequantization — 2-4× less DCN traffic, with quantization
+error bounded by |g|max/127 per shard.
+
+Use inside a ``shard_map`` over the pod axis:
+
+    f = shard_map(step_fn_with(compressed_mean, axis="pod"),
+                  mesh, in_specs=..., out_specs=...)
+
+The exactness/error properties and the presence of an s8 all-gather in the
+lowered HLO are verified in tests/test_collectives.py (subprocess, 8 host
+devices).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray):
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_mean(x: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """Mean of ``x`` across mesh axis ``axis`` with an int8 wire format.
+
+    Must run inside shard_map (needs a bound axis name).  The all-gather
+    payload is int8 (plus one f32 scale per shard); the reduction happens
+    locally after dequantization, preserving f32 accumulation.
+    """
+    q, scale = quantize_int8(x)
+    qs = jax.lax.all_gather(q, axis)            # [n_shards, ...] int8 wire
+    scales = jax.lax.all_gather(scale, axis)    # [n_shards] f32
+    deq = qs.astype(jnp.float32) * scales.reshape(
+        (-1,) + (1,) * (qs.ndim - 1))
+    return jnp.mean(deq, axis=0).astype(x.dtype)
+
+
+def compressed_mean_tree(grads: Any, axis: str) -> Any:
+    """Tree version: per-leaf compressed mean across ``axis``."""
+    return jax.tree_util.tree_map(lambda g: compressed_mean(g, axis), grads)
+
+
+def exact_mean_tree(grads: Any, axis: str) -> Any:
+    """Uncompressed reference (pmean) for error measurement."""
+    return jax.tree_util.tree_map(
+        lambda g: jax.lax.pmean(g, axis), grads)

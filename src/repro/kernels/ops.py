@@ -1,0 +1,58 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True on CPU hosts (the kernels target TPU; the
+interpreter executes the same program for validation) and False when a TPU
+backend is present.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+from .moe_dispatch import moe_dispatch
+from .profiled_matmul import profiled_matmul
+from .ssd_scan import ssd_state_passing
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_block", "kv_block",
+                                             "profile", "interpret"))
+def flash_attention_op(q, k, v, *, causal=True, q_block=128, kv_block=128,
+                       profile=True, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return flash_attention(q, k, v, causal=causal, q_block=q_block,
+                           kv_block=kv_block, profile=profile,
+                           interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("n_experts", "capacity",
+                                             "expert_block", "tok_block",
+                                             "interpret"))
+def moe_dispatch_op(eids, *, n_experts, capacity, expert_block=8,
+                    tok_block=256, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return moe_dispatch(eids, n_experts, capacity, expert_block=expert_block,
+                        tok_block=tok_block, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("head_block", "interpret"))
+def ssd_state_passing_op(states, decays, *, head_block=8, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return ssd_state_passing(states, decays, head_block=head_block,
+                             interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "profile", "interpret"))
+def profiled_matmul_op(a, b, *, block_m=256, block_n=256, block_k=512,
+                       profile=True, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return profiled_matmul(a, b, block_m=block_m, block_n=block_n,
+                           block_k=block_k, profile=profile,
+                           interpret=interpret)

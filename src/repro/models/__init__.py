@@ -1,0 +1,13 @@
+"""Model zoo: the ten assigned architectures as composable pure functions."""
+from . import attention, common, encdec, hybrid, mlp, moe, params, ssm, transformer
+from .params import (
+    ParamSpec, abstract_params, count_params, init_params, param_bytes,
+    shardings_for, spec_pspec,
+)
+
+__all__ = [
+    "attention", "common", "encdec", "hybrid", "mlp", "moe", "params", "ssm",
+    "transformer",
+    "ParamSpec", "abstract_params", "count_params", "init_params",
+    "param_bytes", "shardings_for", "spec_pspec",
+]

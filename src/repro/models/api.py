@@ -1,0 +1,88 @@
+"""Family-dispatch API: one uniform surface over all ten architectures.
+
+Everything downstream (train step, serve step, dry-run, benchmarks) goes
+through these five functions; the family switch lives here only.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, hybrid, transformer
+from .transformer import KvCaches
+
+
+def model_specs(cfg):
+    if cfg.family == "hybrid":
+        return hybrid.hybrid_specs(cfg)
+    if cfg.is_encdec:
+        return encdec.encdec_specs(cfg)
+    return transformer.lm_specs(cfg)
+
+
+def loss_fn(cfg, params, batch: Dict[str, jnp.ndarray]):
+    """Returns (total_loss, (ce_loss, profile_rows))."""
+    if cfg.family == "hybrid":
+        return hybrid.hybrid_loss(cfg, params, batch["tokens"], batch["labels"])
+    if cfg.is_encdec:
+        return encdec.encdec_loss(cfg, params, batch["frames"],
+                                  batch["dec_tokens"], batch["dec_labels"])
+    return transformer.lm_loss(cfg, params, batch["tokens"], batch["labels"])
+
+
+def init_caches(cfg, batch: int, max_len: int):
+    if cfg.family == "hybrid":
+        return hybrid.hybrid_caches_init(cfg, batch,
+                                         window=min(max_len, hybrid.SHARED_WINDOW))
+    if cfg.is_encdec:
+        return encdec.encdec_caches_init(cfg, batch, max_len)
+    if cfg.family == "ssm":
+        return transformer.ssm_caches_init(cfg, batch)
+    return transformer.kv_cache_init(cfg, batch, max_len)
+
+
+def decode_fn(cfg, params, caches, tokens, pos):
+    """One-token serve step: returns (logits, new_caches, profile_rows)."""
+    if cfg.family == "hybrid":
+        return hybrid.hybrid_decode_step(cfg, params, caches, tokens, pos)
+    if cfg.is_encdec:
+        return encdec.encdec_decode_step(cfg, params, caches, tokens, pos)
+    return transformer.lm_decode_step(cfg, params, caches, tokens, pos)
+
+
+def prefill_fn(cfg, params, batch):
+    if cfg.is_encdec:
+        enc_out = encdec.encode(cfg, params, batch["frames"])
+        return enc_out, None
+    if cfg.family == "hybrid":
+        B, S = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        h, _, _ = hybrid.hybrid_hidden(cfg, params, batch["tokens"], positions)
+        return h[:, -1:, :], None
+    return transformer.lm_prefill(cfg, params, batch["tokens"])
+
+
+def tape_spec(cfg):
+    if cfg.is_encdec:
+        return encdec.encdec_tape_spec(cfg)
+    return transformer.tape_spec_for(cfg)
+
+
+def make_batch(cfg, batch_size: int, seq_len: int, key=None) -> Dict[str, jnp.ndarray]:
+    """Concrete random batch in the family's input format (smoke tests)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if cfg.is_encdec:
+        k1, k2 = jax.random.split(key)
+        enc_len = min(cfg.encoder_seq, seq_len)
+        return {
+            "frames": jax.random.normal(
+                k1, (batch_size, enc_len, cfg.d_model), jnp.float32),
+            "dec_tokens": jax.random.randint(
+                k2, (batch_size, seq_len), 0, cfg.vocab_size),
+            "dec_labels": jax.random.randint(
+                k2, (batch_size, seq_len), 0, cfg.vocab_size),
+        }
+    toks = jax.random.randint(key, (batch_size, seq_len), 0, cfg.vocab_size)
+    return {"tokens": toks, "labels": toks}

@@ -1,0 +1,217 @@
+"""Whisper-style encoder-decoder backbone (conv frontend stubbed).
+
+Per the assignment, ``[audio]`` entries specify the transformer backbone
+only: ``input_specs()`` provides precomputed frame embeddings [B, T_enc, d]
+(the two-conv stem is a stub that the data pipeline emulates).  The encoder
+is bidirectional; the decoder is causal with cross-attention.  Decode cells
+run the decoder step (self-KV cache + fixed cross-KV from the encoder).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import Label, TapeSpec
+from .attention import attention, decode_attention, naive_attention
+from .common import apply_rotary, rms_norm
+from .mlp import mlp_apply, mlp_specs
+from .params import ParamSpec
+from .transformer import _attn_project, _remat, attn_specs, chunked_ce_loss
+from ..distributed.ctx import shard_act
+
+
+def encdec_specs(cfg) -> Dict[str, Any]:
+    dtype = cfg.dtype()
+    Le, Ld = cfg.n_encoder_layers, cfg.n_layers
+
+    def nspec(stacked):
+        return ParamSpec((stacked, cfg.d_model), dtype,
+                         ("layers", "embed_act"), init="ones")
+
+    return {
+        "embed": ParamSpec((cfg.padded_vocab, cfg.d_model), dtype,
+                           ("vocab", "embed"), scale=1.0),
+        "enc_pos": ParamSpec((cfg.encoder_seq, cfg.d_model), dtype,
+                             (None, "embed"), scale=0.02),
+        "encoder": {
+            "norm1": nspec(Le),
+            "norm2": nspec(Le),
+            "attn": attn_specs(cfg, stacked=Le),
+            "mlp": mlp_specs(cfg.d_model, cfg.d_ff, dtype, stacked=Le,
+                             gated=cfg.mlp_gated),
+        },
+        "enc_final_norm": ParamSpec((cfg.d_model,), dtype, ("embed_act",),
+                                    init="ones"),
+        "decoder": {
+            "norm1": nspec(Ld),
+            "norm_x": nspec(Ld),
+            "norm2": nspec(Ld),
+            "self_attn": attn_specs(cfg, stacked=Ld),
+            "cross_attn": attn_specs(cfg, stacked=Ld),
+            "mlp": mlp_specs(cfg.d_model, cfg.d_ff, dtype, stacked=Ld,
+                             gated=cfg.mlp_gated),
+        },
+        "final_norm": ParamSpec((cfg.d_model,), dtype, ("embed_act",),
+                                init="ones"),
+        "lm_head": ParamSpec((cfg.d_model, cfg.padded_vocab), dtype,
+                             ("embed", "vocab")),
+    }
+
+
+def encdec_tape_spec(cfg) -> TapeSpec:
+    return TapeSpec(labels=(
+        Label("act_rms", "act_rms", 1),
+        Label("act_absmax", "act_absmax", 1),
+        Label("attn_logit_max", "logit_max", 1),
+        Label("cross_logit_max", "logit_max", 1),
+    ))
+
+
+def encode(cfg, params, frames):
+    """frames: [B, T_enc, d] precomputed embeddings (stub frontend)."""
+    B, T, _ = frames.shape
+    x = frames.astype(jnp.dtype(cfg.activation_dtype))
+    x = shard_act(x + params["enc_pos"][:T][None], "batch", "seq", None)
+    positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+
+    def body(carry, p_l):
+        xc = carry
+        q, k, v = _attn_project(cfg, p_l["attn"],
+                                rms_norm(xc, p_l["norm1"], cfg.norm_eps))
+        out, _ = attention(q, k, v, impl="flash_scan", causal=False,
+                           kv_chunk=cfg.attn_kv_chunk)
+        xc = xc + out.reshape(B, T, -1) @ p_l["attn"]["wo"]
+        h = mlp_apply(p_l["mlp"], rms_norm(xc, p_l["norm2"], cfg.norm_eps),
+                      cfg.activation)
+        return shard_act(xc + h, "batch", "seq", None), None
+
+    body = _remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _decoder_block_train(cfg, p_l, x, enc_out, positions):
+    B, T = x.shape[:2]
+    q, k, v = _attn_project(cfg, p_l["self_attn"],
+                            rms_norm(x, p_l["norm1"], cfg.norm_eps))
+    q = apply_rotary(q, positions, cfg.rope_theta, cfg.rotary_fraction)
+    k = apply_rotary(k, positions, cfg.rope_theta, cfg.rotary_fraction)
+    out, lmax = attention(q, k, v, impl=cfg.attn_impl, causal=True,
+                          q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk)
+    x = x + out.reshape(B, T, -1) @ p_l["self_attn"]["wo"]
+
+    # cross attention: queries from decoder, keys/values from encoder output
+    xq = rms_norm(x, p_l["norm_x"], cfg.norm_eps)
+    qc = (xq @ p_l["cross_attn"]["wq"]).reshape(B, T, cfg.n_heads, cfg.head_dim)
+    kc = (enc_out @ p_l["cross_attn"]["wk"]).reshape(
+        B, enc_out.shape[1], cfg.n_kv_heads, cfg.head_dim)
+    vc = (enc_out @ p_l["cross_attn"]["wv"]).reshape(
+        B, enc_out.shape[1], cfg.n_kv_heads, cfg.head_dim)
+    outc, clmax = attention(qc, kc, vc, impl="flash_scan", causal=False,
+                            kv_chunk=cfg.attn_kv_chunk)
+    x = x + outc.reshape(B, T, -1) @ p_l["cross_attn"]["wo"]
+
+    h = mlp_apply(p_l["mlp"], rms_norm(x, p_l["norm2"], cfg.norm_eps),
+                  cfg.activation)
+    return shard_act(x + h, "batch", "seq", None), lmax, clmax
+
+
+def encdec_loss(cfg, params, frames, dec_tokens, dec_labels):
+    """Teacher-forced seq2seq loss; emits per-decoder-layer tape rows."""
+    enc_out = encode(cfg, params, frames)
+    B, S = dec_tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = params["embed"][dec_tokens].astype(jnp.dtype(cfg.activation_dtype))
+    x = shard_act(x, "batch", "seq", None)
+    spec = encdec_tape_spec(cfg)
+    pdtype = jnp.dtype(cfg.profile_dtype)
+
+    def body(carry, p_l):
+        xc = carry
+        xc, lmax, clmax = _decoder_block_train(cfg, p_l, xc, enc_out, positions)
+        xf = xc.astype(jnp.float32)
+        tape = {
+            "act_rms": jnp.sqrt(jnp.mean(jnp.square(xf)) + 1e-30)[None],
+            "act_absmax": jnp.max(jnp.abs(xf))[None],
+            "attn_logit_max": lmax[None],
+            "cross_logit_max": clmax[None],
+        }
+        row = (spec.emit(tape, pdtype) if cfg.profile_policy == "shortcut"
+               else jnp.zeros((0,), pdtype))
+        return xc, row
+
+    body = _remat(body, cfg)
+    x, rows = jax.lax.scan(body, x, params["decoder"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    loss = chunked_ce_loss(cfg, params, x, dec_labels)
+    return loss, (loss, rows)
+
+
+class EncDecCaches(NamedTuple):
+    self_k: jnp.ndarray    # [L, B, Smax, KV, dh]
+    self_v: jnp.ndarray
+    cross_k: jnp.ndarray   # [L, B, T_enc, KV, dh]
+    cross_v: jnp.ndarray
+
+
+def encdec_caches_init(cfg, batch: int, max_len: int) -> EncDecCaches:
+    dt = jnp.dtype(cfg.activation_dtype)
+    dh = cfg.head_dim
+    s_shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, dh)
+    c_shape = (cfg.n_layers, batch, cfg.encoder_seq, cfg.n_kv_heads, dh)
+    return EncDecCaches(jnp.zeros(s_shape, dt), jnp.zeros(s_shape, dt),
+                        jnp.zeros(c_shape, dt), jnp.zeros(c_shape, dt))
+
+
+def encdec_decode_step(cfg, params, caches: EncDecCaches, tokens, pos):
+    """Single decoder token step against self- and cross-KV caches."""
+    B = tokens.shape[0]
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.activation_dtype))
+    positions = jnp.full((B, 1), pos, jnp.int32)
+
+    def body(carry, per_layer):
+        xc = carry
+        p_l, sk, sv, ck, cv = per_layer
+        q, k, v = _attn_project(cfg, p_l["self_attn"],
+                                rms_norm(xc, p_l["norm1"], cfg.norm_eps))
+        q = apply_rotary(q, positions, cfg.rope_theta, cfg.rotary_fraction)
+        k = apply_rotary(k, positions, cfg.rope_theta, cfg.rotary_fraction)
+        sk = jax.lax.dynamic_update_slice(sk, k.astype(sk.dtype), (0, pos, 0, 0))
+        sv = jax.lax.dynamic_update_slice(sv, v.astype(sv.dtype), (0, pos, 0, 0))
+        out, lmax = decode_attention(q, sk, sv, pos + 1)
+        xc = xc + out.reshape(B, 1, -1) @ p_l["self_attn"]["wo"]
+
+        xq = rms_norm(xc, p_l["norm_x"], cfg.norm_eps)
+        qc = (xq @ p_l["cross_attn"]["wq"]).reshape(B, 1, cfg.n_heads,
+                                                    cfg.head_dim)
+        outc, clmax = decode_attention(qc, ck, cv, ck.shape[1])
+        xc = xc + outc.reshape(B, 1, -1) @ p_l["cross_attn"]["wo"]
+
+        h = mlp_apply(p_l["mlp"], rms_norm(xc, p_l["norm2"], cfg.norm_eps),
+                      cfg.activation)
+        return xc + h, (sk, sv, jnp.stack([lmax, clmax]))
+
+    x, (sk, sv, lmaxes) = jax.lax.scan(
+        body, x, (params["decoder"], caches.self_k, caches.self_v,
+                  caches.cross_k, caches.cross_v))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    new_caches = EncDecCaches(sk, sv, caches.cross_k, caches.cross_v)
+    return logits, new_caches, lmaxes.reshape(-1)
+
+
+def cross_caches_from_encoder(cfg, params, enc_out) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Precompute cross-attention K/V for all decoder layers."""
+    B, T, _ = enc_out.shape
+
+    def per_layer(p_l):
+        k = (enc_out @ p_l["cross_attn"]["wk"]).reshape(
+            B, T, cfg.n_kv_heads, cfg.head_dim)
+        v = (enc_out @ p_l["cross_attn"]["wv"]).reshape(
+            B, T, cfg.n_kv_heads, cfg.head_dim)
+        return k, v
+
+    ks, vs = jax.vmap(per_layer)(params["decoder"])
+    return ks, vs

@@ -1,0 +1,237 @@
+"""Mamba2 (SSD — state-space duality) block, TPU-native chunked form.
+
+The SSD computation follows arXiv:2405.21060: within chunks of length Q the
+recurrence is evaluated as a (masked, decay-weighted) quadratic attention-like
+product; across chunks a tiny state-passing recurrence carries [H, P, N]
+states.  This maps onto the MXU as dense matmuls (intra-chunk) plus an
+O(T/Q) ``lax.scan`` (inter-chunk) — the hardware adaptation of the CUDA
+kernel in the paper.  A Pallas kernel version of the chunk scan lives in
+``repro.kernels.ssd_scan``.
+
+Tensor-parallel decomposition: z/x projections and heads shard over the
+model axis; the (single-group) B/C projections are replicated — so the
+in_proj is split into three matmuls (zx / bc / dt) with different shardings,
+mirroring Megatron's Mamba TP.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import rms_norm, silu
+from .params import ParamSpec
+from ..distributed.ctx import shard_act
+
+
+def ssm_specs(cfg, stacked: int = 0) -> Dict[str, ParamSpec]:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h, k = cfg.ssm_heads, cfg.ssm_conv_dim
+    dtype = cfg.dtype()
+
+    def spec(shape, axes, **kw):
+        if stacked:
+            return ParamSpec((stacked,) + shape, dtype, ("layers",) + axes, **kw)
+        return ParamSpec(shape, dtype, axes, **kw)
+
+    return {
+        "zx_proj": spec((d, 2 * di), ("embed", "mlp")),
+        "bc_proj": spec((d, 2 * n), ("embed", None)),
+        "dt_proj": spec((d, h), ("embed", "heads")),
+        "conv_x_w": spec((k, di), (None, "mlp")),
+        "conv_x_b": spec((di,), ("mlp",), init="zeros"),
+        "conv_bc_w": spec((k, 2 * n), (None, None)),
+        "conv_bc_b": spec((2 * n,), (None,), init="zeros"),
+        "A_log": spec((h,), ("heads",), init="zeros"),
+        "D": spec((h,), ("heads",), init="ones"),
+        "dt_bias": spec((h,), ("heads",), init="zeros"),
+        "norm_w": spec((di,), ("mlp",), init="ones"),
+        "out_proj": spec((di, d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal 1-D conv, kernel k, over [B, T, C]."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return out + b[None, None, :]
+
+
+def ssd_chunked(
+    x: jnp.ndarray,    # [B, T, H, P]
+    dt: jnp.ndarray,   # [B, T, H]  (post-softplus)
+    A: jnp.ndarray,    # [H]        (negative)
+    Bm: jnp.ndarray,   # [B, T, N]
+    Cm: jnp.ndarray,   # [B, T, N]
+    chunk: int,
+    init_state: Optional[jnp.ndarray] = None,  # [B, H, P, N]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact SSD over chunks; returns (y [B,T,H,P], final_state [B,H,P,N])."""
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, T)
+    if T % Q:
+        raise ValueError(f"T={T} not divisible by chunk={Q}")
+    nc = T // Q
+
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    a = dtc * A[None, None, None, :]                       # [B,nc,Q,H] (<= 0)
+    cum = jnp.cumsum(a, axis=2)                            # within-chunk cumsum
+
+    # ---- intra-chunk (masked decay attention) ----
+    # L[i,j] = exp(cum[i] - cum[j]) for i >= j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # [B,nc,Qi,Qj,H]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)             # [B,nc,Qi,Qj]
+    w = cb[..., None] * L * dtc[:, :, None, :, :]          # [B,nc,Qi,Qj,H]
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", w, xc)
+
+    # ---- chunk states ----
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)        # [B,nc,Q,H]
+    wstate = (decay_to_end * dtc)                          # [B,nc,Q,H]
+    S = jnp.einsum("bcqh,bcqn,bcqhp->bchpn", wstate, Bc, xc)  # [B,nc,H,P,N]
+
+    # ---- inter-chunk state passing (tiny scan) ----
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # [B,nc,H]
+
+    def body(carry, inp):
+        s_prev = carry                                      # [B,H,P,N]
+        s_c, dec = inp                                      # [B,H,P,N], [B,H]
+        out = s_prev                                        # state BEFORE chunk
+        s_next = dec[:, :, None, None] * s_prev + s_c
+        return s_next, out
+
+    s0 = (jnp.zeros((Bsz, H, P, N), x.dtype) if init_state is None
+          else init_state.astype(x.dtype))
+    final_state, states_before = jax.lax.scan(
+        body,
+        s0,
+        (S.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    states_before = states_before.transpose(1, 0, 2, 3, 4)  # [B,nc,H,P,N]
+
+    # ---- inter-chunk contribution ----
+    decay_in = jnp.exp(cum)                                 # [B,nc,Q,H]
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc, states_before, decay_in)
+
+    y = (y_diag + y_off).reshape(Bsz, T, H, P)
+    return y, final_state
+
+
+class SsmCache(NamedTuple):
+    conv_x: jnp.ndarray   # [B, k-1, di]
+    conv_bc: jnp.ndarray  # [B, k-1, 2n]
+    state: jnp.ndarray    # [B, H, P, N]
+
+
+def ssm_cache_init(cfg, batch: int, dtype) -> SsmCache:
+    k = cfg.ssm_conv_dim
+    return SsmCache(
+        conv_x=jnp.zeros((batch, k - 1, cfg.d_inner), dtype),
+        conv_bc=jnp.zeros((batch, k - 1, 2 * cfg.ssm_state), dtype),
+        state=jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), dtype),
+    )
+
+
+def _split_heads(x, h, p):
+    return x.reshape(x.shape[:-1] + (h, p))
+
+
+def ssm_block_apply(
+    cfg, p: Dict[str, jnp.ndarray], x: jnp.ndarray,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Training/prefill path: full-sequence SSD. x: [B, T, d]."""
+    di, n, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zx = shard_act(x @ p["zx_proj"], "batch", "seq", "mlp")
+    z, xin = zx[..., :di], zx[..., di:]
+    bc = x @ p["bc_proj"]
+    dt_raw = shard_act(x @ p["dt_proj"], "batch", "seq", "heads")
+
+    xin = silu(_causal_conv(xin, p["conv_x_w"], p["conv_x_b"]))
+    bc = silu(_causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"]))
+    Bm, Cm = bc[..., :n], bc[..., n:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    xh = _split_heads(xin, H, P)
+    y, final_state = ssd_chunked(
+        xh.astype(jnp.float32), dt, A,
+        Bm.astype(jnp.float32), Cm.astype(jnp.float32), cfg.ssm_chunk)
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(x.shape[0], x.shape[1], di).astype(x.dtype)
+
+    y = rms_norm(y * silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    profile = {"state_rms": jnp.sqrt(jnp.mean(jnp.square(
+        final_state.astype(jnp.float32))) + 1e-30)[None]}
+    return out, profile
+
+
+def ssm_block_decode(
+    cfg, p: Dict[str, jnp.ndarray], x: jnp.ndarray, cache: SsmCache,
+) -> Tuple[jnp.ndarray, SsmCache, Dict[str, jnp.ndarray]]:
+    """Single-token recurrent step. x: [B, 1, d]."""
+    di, n, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    B = x.shape[0]
+    zx = x @ p["zx_proj"]
+    z, xin = zx[..., :di], zx[..., di:]
+    bc = x @ p["bc_proj"]
+    dt_raw = x @ p["dt_proj"]
+
+    # rolling conv windows
+    win_x = jnp.concatenate([cache.conv_x, xin], axis=1)       # [B, k, di]
+    win_bc = jnp.concatenate([cache.conv_bc, bc], axis=1)
+    xin = silu(jnp.einsum("bkc,kc->bc", win_x, p["conv_x_w"])
+               + p["conv_x_b"])[:, None, :]
+    bc_c = silu(jnp.einsum("bkc,kc->bc", win_bc, p["conv_bc_w"])
+                + p["conv_bc_b"])[:, None, :]
+    Bm, Cm = bc_c[..., :n], bc_c[..., n:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))[:, 0]   # [B, H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = _split_heads(xin[:, 0], H, P).astype(jnp.float32)           # [B, H, P]
+
+    decay = jnp.exp(dt * A[None, :])                                 # [B, H]
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt, Bm[:, 0].astype(jnp.float32), xh)
+    state = decay[:, :, None, None] * cache.state.astype(jnp.float32) + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), state)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, di).astype(x.dtype)
+
+    y = rms_norm(y * silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    new_cache = SsmCache(
+        conv_x=win_x[:, 1:, :], conv_bc=win_bc[:, 1:, :],
+        state=state.astype(cache.state.dtype))
+    profile = {"state_rms": jnp.sqrt(jnp.mean(jnp.square(state)) + 1e-30)[None]}
+    return out, new_cache, profile
+
+
+def ssd_reference(x, dt, A, Bm, Cm, init_state=None):
+    """Sequential O(T) recurrence — oracle for the chunked/Pallas versions."""
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    s = (jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None
+         else init_state.astype(jnp.float32))
+
+    def step(s, t):
+        decay = jnp.exp(dt[:, t] * A[None, :])                    # [B,H]
+        s = decay[:, :, None, None] * s + jnp.einsum(
+            "bh,bn,bhp->bhpn", dt[:, t], Bm[:, t], x[:, t])
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, t], s)
+        return s, y
+
+    s, ys = jax.lax.scan(step, s, jnp.arange(T))
+    return ys.transpose(1, 0, 2, 3), s

@@ -1,0 +1,424 @@
+"""Decoder-only LM assembly: blocks, scan-over-layers, loss, prefill/decode.
+
+Covers the dense, MoE, SSM and VLM-backbone (early-fusion) families.  The
+SPRING profile tape is threaded as a first-class output: under the
+``shortcut`` policy every scanned block emits one fixed-width record row
+(activation stats, attention logit max, MoE expert-buffer fullness) straight
+into the stacked [L, width] buffer; under ``inline`` (unrolled layers only)
+the faithful growing stream is carried; ``off`` disables collection for
+overhead baselines (benchmarks/fig3).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import Label, ProfileStream, TapeSpec, rows_to_stream
+from ..core.stream import validate_policy
+from .attention import attention, decode_attention
+from ..distributed.ctx import shard_act
+from .common import apply_rotary, rms_norm
+from .mlp import mlp_apply, mlp_specs
+from .moe import capacity_for, moe_apply, moe_specs
+from .params import ParamSpec
+from .ssm import (
+    SsmCache, ssm_block_apply, ssm_block_decode, ssm_cache_init, ssm_specs,
+)
+
+# --------------------------------------------------------------------------- #
+# parameter specs
+# --------------------------------------------------------------------------- #
+def attn_specs(cfg, stacked: int = 0) -> Dict[str, ParamSpec]:
+    d, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dtype = cfg.dtype()
+
+    def spec(shape, axes, **kw):
+        if stacked:
+            return ParamSpec((stacked,) + shape, dtype, ("layers",) + axes, **kw)
+        return ParamSpec(shape, dtype, axes, **kw)
+
+    out = {
+        "wq": spec((d, H * dh), ("embed", "heads")),
+        "wk": spec((d, KV * dh), ("embed", "kv_heads")),
+        "wv": spec((d, KV * dh), ("embed", "kv_heads")),
+        "wo": spec((H * dh, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = spec((H * dh,), ("heads",), init="zeros")
+        out["bk"] = spec((KV * dh,), ("kv_heads",), init="zeros")
+        out["bv"] = spec((KV * dh,), ("kv_heads",), init="zeros")
+    if cfg.qk_norm:
+        out["q_norm"] = spec((dh,), (None,), init="ones")
+        out["k_norm"] = spec((dh,), (None,), init="ones")
+    return out
+
+
+def block_specs(cfg, stacked: int = 0) -> Dict[str, Any]:
+    dtype = cfg.dtype()
+
+    def nspec(**kw):
+        shape, axes = (cfg.d_model,), ("embed_act",)
+        if stacked:
+            shape, axes = (stacked,) + shape, ("layers",) + axes
+        return ParamSpec(shape, dtype, axes, init="ones", **kw)
+
+    if cfg.family == "ssm":
+        return {"norm1": nspec(), "ssm": ssm_specs(cfg, stacked)}
+    out = {
+        "norm1": nspec(),
+        "norm2": nspec(),
+        "attn": attn_specs(cfg, stacked),
+    }
+    if cfg.family == "moe":
+        out["moe"] = moe_specs(cfg.d_model, cfg.d_ff, cfg.n_experts, dtype,
+                               stacked, cfg.n_shared_experts)
+    else:
+        out["mlp"] = mlp_specs(cfg.d_model, cfg.d_ff, dtype, stacked,
+                               gated=cfg.mlp_gated)
+    return out
+
+
+def lm_specs(cfg) -> Dict[str, Any]:
+    dtype = cfg.dtype()
+    L = cfg.n_layers if cfg.scan_layers else 0
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((cfg.padded_vocab, cfg.d_model), dtype,
+                           ("vocab", "embed"), scale=1.0),
+        "final_norm": ParamSpec((cfg.d_model,), dtype, ("embed_act",),
+                                init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((cfg.d_model, cfg.padded_vocab), dtype,
+                                     ("embed", "vocab"))
+    if cfg.scan_layers:
+        specs["blocks"] = block_specs(cfg, stacked=cfg.n_layers)
+    else:
+        specs["blocks"] = [block_specs(cfg) for _ in range(cfg.n_layers)]
+    return specs
+
+
+# --------------------------------------------------------------------------- #
+# profile tape
+# --------------------------------------------------------------------------- #
+def tape_spec_for(cfg) -> TapeSpec:
+    labels = [Label("act_rms", "act_rms", 1), Label("act_absmax", "act_absmax", 1)]
+    if cfg.family == "ssm":
+        labels.append(Label("state_rms", "state_rms", 1))
+    else:
+        labels.append(Label("attn_logit_max", "logit_max", 1))
+    if cfg.family == "moe":
+        labels += [
+            Label("expert_fullness", "fifo_fullness", cfg.n_experts),
+            Label("expert_overflow", "fifo_overflow", cfg.n_experts),
+            Label("capacity", "capacity", 1),
+        ]
+    if cfg.family == "hybrid":
+        labels.append(Label("state_rms", "state_rms", 1))
+    return TapeSpec(labels=tuple(labels))
+
+
+# --------------------------------------------------------------------------- #
+# block application
+# --------------------------------------------------------------------------- #
+def _attn_project(cfg, p, x):
+    B, T, _ = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, T, H, dh)
+    k = k.reshape(B, T, KV, dh)
+    v = v.reshape(B, T, KV, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def attn_apply_train(cfg, p, x, positions):
+    """Full-sequence causal self-attention. Returns (out, logit_max, (k, v))."""
+    q, k, v = _attn_project(cfg, p, x)
+    q = apply_rotary(q, positions, cfg.rope_theta, cfg.rotary_fraction)
+    k = apply_rotary(k, positions, cfg.rope_theta, cfg.rotary_fraction)
+    q = shard_act(q, "batch", "seq", "heads", None)
+    k = shard_act(k, "batch", "seq", "kv_heads", None)
+    v = shard_act(v, "batch", "seq", "kv_heads", None)
+    out, lmax = attention(
+        q, k, v, impl=cfg.attn_impl, causal=True,
+        q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk)
+    B, T = x.shape[:2]
+    out = shard_act(out.reshape(B, T, -1), "batch", "seq", "heads")
+    return out @ p["wo"], lmax, (k, v)
+
+
+def attn_apply_decode(cfg, p, x, k_cache, v_cache, pos):
+    """One-token attention against the cache; writes position ``pos``."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _attn_project(cfg, p, x)
+    q = apply_rotary(q, positions, cfg.rope_theta, cfg.rotary_fraction)
+    k = apply_rotary(k, positions, cfg.rope_theta, cfg.rotary_fraction)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                           (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                           (0, pos, 0, 0))
+    out, lmax = decode_attention(q, k_cache, v_cache, pos + 1)
+    return out.reshape(B, 1, -1) @ p["wo"], lmax, (k_cache, v_cache)
+
+
+def block_apply_train(cfg, p, x, positions):
+    """Pre-norm block. Returns (x, tape_values, aux_loss)."""
+    aux = jnp.float32(0.0)
+    tape: Dict[str, jnp.ndarray] = {}
+    if cfg.family == "ssm":
+        h, prof = ssm_block_apply(cfg, p["ssm"],
+                                  rms_norm(x, p["norm1"], cfg.norm_eps))
+        x = x + h
+        tape.update(prof)
+    else:
+        h, lmax, _ = attn_apply_train(
+            cfg, p["attn"], rms_norm(x, p["norm1"], cfg.norm_eps), positions)
+        x = x + h
+        tape["attn_logit_max"] = lmax[None]
+        h_in = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            h, moe_aux, prof = moe_apply(
+                p["moe"], h_in, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor, activation=cfg.activation)
+            aux = aux + cfg.router_aux_weight * moe_aux
+            tape.update(prof)
+        else:
+            h = mlp_apply(p["mlp"], h_in, cfg.activation)
+        x = x + h
+    x = shard_act(x, "batch", "seq", None)
+    xf = x.astype(jnp.float32)
+    tape["act_rms"] = jnp.sqrt(jnp.mean(jnp.square(xf)) + 1e-30)[None]
+    tape["act_absmax"] = jnp.max(jnp.abs(xf))[None]
+    return x, tape, aux
+
+
+def block_apply_decode(cfg, p, x, cache, pos):
+    """cache: (k, v) tensors or SsmCache. Returns (x, cache, tape)."""
+    tape: Dict[str, jnp.ndarray] = {}
+    if cfg.family == "ssm":
+        h, new_cache, prof = ssm_block_decode(
+            cfg, p["ssm"], rms_norm(x, p["norm1"], cfg.norm_eps), cache)
+        x = x + h
+        tape.update(prof)
+    else:
+        k_cache, v_cache = cache
+        h, lmax, new_cache = attn_apply_decode(
+            cfg, p["attn"], rms_norm(x, p["norm1"], cfg.norm_eps),
+            k_cache, v_cache, pos)
+        x = x + h
+        tape["attn_logit_max"] = lmax[None]
+        h_in = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            h, _, prof = moe_apply(
+                p["moe"], h_in, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor, activation=cfg.activation)
+            tape.update(prof)
+        else:
+            h = mlp_apply(p["mlp"], h_in, cfg.activation)
+        x = x + h
+    xf = x.astype(jnp.float32)
+    tape["act_rms"] = jnp.sqrt(jnp.mean(jnp.square(xf)) + 1e-30)[None]
+    tape["act_absmax"] = jnp.max(jnp.abs(xf))[None]
+    return x, new_cache, tape
+
+
+# --------------------------------------------------------------------------- #
+# remat policies
+# --------------------------------------------------------------------------- #
+def _remat(fn, cfg):
+    if not cfg.remat:
+        return fn
+    policies = {
+        "nothing": jax.checkpoint_policies.nothing_saveable,
+        "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        "full": jax.checkpoint_policies.everything_saveable,
+    }
+    return jax.checkpoint(fn, policy=policies[cfg.remat_policy])
+
+
+# --------------------------------------------------------------------------- #
+# forward / loss
+# --------------------------------------------------------------------------- #
+def lm_hidden(cfg, params, tokens, positions):
+    """Token ids -> final hidden states.  Returns (h, rows, aux)."""
+    spec = tape_spec_for(cfg)
+    pdtype = jnp.dtype(cfg.profile_dtype)
+    policy = validate_policy(cfg.profile_policy)
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.activation_dtype))
+    x = shard_act(x, "batch", "seq", None)
+
+    if cfg.scan_layers:
+        def body(carry, per_layer):
+            xc, aux = carry
+            p_l = per_layer
+            xc, tape, aux_l = block_apply_train(cfg, p_l, xc, positions)
+            row = (spec.emit(tape, pdtype) if policy == "shortcut"
+                   else jnp.zeros((0,), pdtype))
+            return (xc, aux + aux_l), row
+
+        body = _remat(body, cfg)
+        (x, aux), rows = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                      params["blocks"])
+    else:
+        aux = jnp.float32(0.0)
+        row_list = []
+        for p_l in params["blocks"]:
+            x, tape, aux_l = block_apply_train(cfg, p_l, x, positions)
+            aux = aux + aux_l
+            if policy != "off":
+                row_list.append(spec.emit(tape, pdtype))
+        rows = (jnp.stack(row_list) if (row_list and policy != "off")
+                else jnp.zeros((cfg.n_layers, 0), pdtype))
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, rows, aux
+
+
+def lm_logits(cfg, params, h):
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return h @ head
+
+
+def chunked_ce_loss(cfg, params, h, labels):
+    """Cross-entropy with the vocab projection chunked over sequence."""
+    B, S, d = h.shape
+    chunk = min(cfg.loss_chunk, S)
+    if S % chunk:
+        chunk = S
+    n = S // chunk
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    # FSDP gather-at-use: unshard the head's embed (data) dim here so XLA
+    # gathers the small weight once rather than the huge logits/activations.
+    head = shard_act(head, None, "vocab")
+    pad_mask = (jnp.arange(cfg.padded_vocab) >= cfg.vocab_size) * -1e30
+
+    @jax.checkpoint
+    def body(carry, idx):
+        total, cnt = carry
+        hc = jax.lax.dynamic_slice_in_dim(h, idx * chunk, chunk, axis=1)
+        lc = jax.lax.dynamic_slice_in_dim(labels, idx * chunk, chunk, axis=1)
+        logits = shard_act((hc @ head).astype(jnp.float32) + pad_mask,
+                           "batch", "seq", "vocab")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        total = total + jnp.sum((logz - gold) * mask)
+        cnt = cnt + jnp.sum(mask)
+        return (total, cnt), None
+
+    (total, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), jnp.arange(n))
+    return total / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(cfg, params, tokens, labels):
+    """Next-token loss + profile stream rows.  tokens/labels: [B, S]."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    h, rows, aux = lm_hidden(cfg, params, tokens, positions)
+    loss = chunked_ce_loss(cfg, params, h, labels)
+    return loss + aux, (loss, rows)
+
+
+def assemble_stream(cfg, rows) -> Optional[ProfileStream]:
+    if cfg.profile_policy == "off" or rows.shape[-1] == 0:
+        return None
+    return rows_to_stream(tape_spec_for(cfg), rows, layer_prefix="block")
+
+
+# --------------------------------------------------------------------------- #
+# serving: prefill + decode
+# --------------------------------------------------------------------------- #
+class KvCaches(NamedTuple):
+    k: jnp.ndarray   # [L, B, Smax, KV, dh]
+    v: jnp.ndarray
+
+
+def kv_cache_init(cfg, batch: int, max_len: int) -> KvCaches:
+    dh = cfg.head_dim
+    dt = jnp.dtype(cfg.activation_dtype)
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, dh)
+    return KvCaches(jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+
+
+def ssm_caches_init(cfg, batch: int):
+    dt = jnp.dtype(cfg.activation_dtype)
+    one = ssm_cache_init(cfg, batch, dt)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), one)
+
+
+def lm_decode_step(cfg, params, caches, tokens, pos):
+    """One decode step.  tokens: [B, 1]; caches stacked over layers.
+
+    Returns (logits [B, 1, V], caches, rows).
+    """
+    spec = tape_spec_for(cfg)
+    pdtype = jnp.dtype(cfg.profile_dtype)
+    policy = validate_policy(cfg.profile_policy)
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.activation_dtype))
+
+    def body(carry, per_layer):
+        xc = carry
+        p_l, cache_l = per_layer
+        xc, new_cache, tape = block_apply_decode(cfg, p_l, xc, cache_l, pos)
+        row = (spec.emit(tape, pdtype) if policy == "shortcut"
+               else jnp.zeros((0,), pdtype))
+        return xc, (new_cache, row)
+
+    if cfg.family == "ssm":
+        cache_tree = caches
+    else:
+        cache_tree = (caches.k, caches.v)
+    x, (new_caches, rows) = jax.lax.scan(body, x, (params["blocks"], cache_tree))
+    if cfg.family != "ssm":
+        new_caches = KvCaches(*new_caches)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(cfg, params, x)
+    return logits, new_caches, rows
+
+
+def lm_prefill(cfg, params, tokens):
+    """Prefill: returns (last-position logits, caches filled to S)."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.activation_dtype))
+
+    def body(carry, p_l):
+        xc = carry
+        if cfg.family == "ssm":
+            h, prof = ssm_block_apply(
+                cfg, p_l["ssm"], rms_norm(xc, p_l["norm1"], cfg.norm_eps))
+            xc = xc + h
+            # SSD final state is recomputed per layer for the cache below
+            return xc, None
+        h, lmax, (k, v) = attn_apply_train(
+            cfg, p_l["attn"], rms_norm(xc, p_l["norm1"], cfg.norm_eps),
+            positions)
+        xc = xc + h
+        h_in = rms_norm(xc, p_l["norm2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            h, _, _ = moe_apply(p_l["moe"], h_in, top_k=cfg.top_k,
+                                capacity_factor=cfg.capacity_factor,
+                                activation=cfg.activation)
+        else:
+            h = mlp_apply(p_l["mlp"], h_in, cfg.activation)
+        xc = xc + h
+        return xc, (k, v)
+
+    x, kv = jax.lax.scan(body, x, params["blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits_last = lm_logits(cfg, params, x[:, -1:, :])
+    caches = None if cfg.family == "ssm" else KvCaches(kv[0], kv[1])
+    return logits_last, caches

@@ -1,0 +1,2 @@
+from .adamw import (AdamWConfig, AdamWState, apply_updates, global_norm,
+                    init_state, schedule, state_specs)

@@ -1,0 +1,103 @@
+"""AdamW with fp32 moments, cosine schedule, clipping — sharded states.
+
+Optimizer state mirrors the parameter tree (same logical axes ⇒ same
+shardings), with fp32 first/second moments regardless of parameter dtype —
+the standard mixed-precision large-model recipe.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray   # [] int32
+    mu: Any             # pytree, f32
+    nu: Any             # pytree, f32
+
+
+def init_state(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree_util.tree_map(zeros, params),
+        nu=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def state_specs(param_specs):
+    """ParamSpec tree for the optimizer state (f32, same logical axes)."""
+    from ..models.params import ParamSpec, is_spec
+
+    def f32(s):
+        return ParamSpec(s.shape, jnp.float32, s.axes, init="zeros")
+
+    mu = jax.tree_util.tree_map(f32, param_specs, is_leaf=is_spec)
+    nu = jax.tree_util.tree_map(f32, param_specs, is_leaf=is_spec)
+    return AdamWState(step=ParamSpec((), jnp.int32, (), init="zeros"),
+                      mu=mu, nu=nu)
+
+
+def schedule(cfg: AdamWConfig, step) -> jnp.ndarray:
+    stepf = step.astype(jnp.float32)
+    warm = jnp.minimum(stepf / max(1, cfg.warmup_steps), 1.0)
+    prog = jnp.clip((stepf - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves) + 1e-30)
+
+
+def apply_updates(cfg: AdamWConfig, params, state: AdamWState, grads
+                  ) -> Tuple[Any, AdamWState, dict]:
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, n):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        n = cfg.b2 * n + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        nhat = n / b2c
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (norms/bias exempt)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, n
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_n = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_m, flat_n)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_n = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_n), metrics

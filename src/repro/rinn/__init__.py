@@ -1,0 +1,27 @@
+"""RINN benchmarks: generation, functional execution, streaming simulation."""
+from .graphgen import PATTERNS, RinnConfig, RinnGraph, generate_rinn
+from .layers import (
+    AddSpec, AvgPool2DSpec, CloneSpec, ConcatSpec, Conv2DSpec,
+    DenseSpec, DepthwiseConv2DSpec, FlattenSpec, InputSpec, LayerSpec,
+    MaxPool2DSpec, ReluSpec, ReshapeSpec, SigmoidSpec, beats_for_shape,
+)
+from .hls import BOARDS, PYNQ_Z2, TimingProfile, ZCU102
+from .build import (
+    forward, forward_batch, init_params, synthetic_mnist16,
+    to_profiled_dag, train_symbolically,
+)
+from .streamsim import CompiledSim, SimResult, compile_graph, run_sim
+from .cosim import CosimReport, FifoRow, compare, cosim_only
+
+__all__ = [
+    "PATTERNS", "RinnConfig", "RinnGraph", "generate_rinn",
+    "AddSpec", "AvgPool2DSpec", "CloneSpec", "ConcatSpec", "Conv2DSpec",
+    "DenseSpec", "DepthwiseConv2DSpec", "MaxPool2DSpec",
+    "FlattenSpec", "InputSpec", "LayerSpec", "ReluSpec", "ReshapeSpec",
+    "SigmoidSpec", "beats_for_shape",
+    "BOARDS", "PYNQ_Z2", "TimingProfile", "ZCU102",
+    "forward", "forward_batch", "init_params", "synthetic_mnist16",
+    "to_profiled_dag", "train_symbolically",
+    "CompiledSim", "SimResult", "compile_graph", "run_sim",
+    "CosimReport", "FifoRow", "compare", "cosim_only",
+]

@@ -1,0 +1,141 @@
+"""Functional (JAX) realization of a RINN with the in-band profile stream.
+
+The forward pass traverses the DAG in topo order.  The profile stream follows
+the *data edges* exactly as in the paper: every edge carries (tensor, stream
+segment); a clone node splits the stream (first branch carries, others get a
+placeholder); a merge node concatenates segments in input order; every
+profiled node appends its record.  The resulting positional label order is
+therefore identical to ``repro.core.policies.plan_routing(...,
+policy="inline", split_rule="first")`` — tested as a cross-check.
+
+Also provides symbolic training (the paper trains RINNs "symbolically" on
+MNIST-shaped data — the weights only need to be realistic, not accurate).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import ProfileStream, metrics
+from ..core.policies import DagNode, ProfiledDag, plan_routing
+from .graphgen import RinnGraph
+from .layers import CloneSpec, InputSpec
+
+RECORD_METRICS = ("act_absmax", "act_rms")
+RECORD_SIZE = len(RECORD_METRICS)
+
+
+def init_params(graph: RinnGraph, key) -> Dict[str, dict]:
+    shapes = graph.shapes()
+    params: Dict[str, dict] = {}
+    for nid in graph.topo_order():
+        spec = graph.nodes[nid]
+        ins = [shapes[p] for p in graph.predecessors(nid)]
+        key, sub = jax.random.split(key)
+        p = spec.init(sub, ins) if ins else {}
+        if p:
+            params[nid] = p
+    return params
+
+
+def forward(
+    graph: RinnGraph,
+    params: Dict[str, dict],
+    x: jnp.ndarray,
+    profile: str = "inline",
+    profile_dtype=jnp.float32,
+) -> Tuple[jnp.ndarray, Optional[ProfileStream]]:
+    """Run the RINN on one example ``x: (16,)``.
+
+    profile: "off" | "inline".  (The RINN graph is Python-unrolled, so the
+    faithful inline policy is exact here; `shortcut` applies to scanned
+    models — see repro.models.)
+    """
+    order = graph.topo_order()
+    inp = graph.input_id()
+    tensors: Dict[Tuple[str, str], jnp.ndarray] = {}
+    streams: Dict[Tuple[str, str], ProfileStream] = {}
+    profiling = profile != "off"
+
+    out_tensor = None
+    out_stream: Optional[ProfileStream] = None
+    for nid in order:
+        spec = graph.nodes[nid]
+        preds = graph.predecessors(nid)
+        succs = graph.successors(nid)
+        if isinstance(spec, InputSpec):
+            y = x
+            s = ProfileStream.create(dtype=profile_dtype) if profiling else None
+        else:
+            xs = [tensors.pop((p, nid)) for p in preds]
+            y = spec.apply(params.get(nid, {}), xs)
+            if profiling:
+                s = ProfileStream.merge(*[streams.pop((p, nid)) for p in preds])
+                if spec.profiled:
+                    s = s.append(f"{nid}/act_absmax", "act_absmax",
+                                 metrics.act_absmax(y))
+                    s = s.append(f"{nid}/act_rms", "act_rms", metrics.act_rms(y))
+            else:
+                s = None
+
+        if not succs:
+            out_tensor, out_stream = y, s
+            continue
+        if profiling:
+            branches = s.split(len(succs)) if len(succs) > 1 else (s,)
+        for i, d in enumerate(succs):
+            tensors[(nid, d)] = y
+            if profiling:
+                streams[(nid, d)] = branches[i]
+    return out_tensor, out_stream
+
+
+def forward_batch(graph, params, xb, profile="off"):
+    """vmap the single-example forward (profile off — streams are per-run)."""
+    f = lambda x: forward(graph, params, x, profile="off")[0]
+    return jax.vmap(f)(xb)
+
+
+def to_profiled_dag(graph: RinnGraph) -> ProfiledDag:
+    """Project the RINN onto the abstract routing DAG (for plan cross-checks)."""
+    nodes = tuple(
+        DagNode(nid, RECORD_SIZE if graph.nodes[nid].profiled else 0)
+        for nid in graph.nodes
+    )
+    return ProfiledDag(nodes, tuple(graph.edges))
+
+
+# --------------------------------------------------------------------------- #
+# symbolic training (paper §II.B: "we symbolically train the RINNs")
+# --------------------------------------------------------------------------- #
+def synthetic_mnist16(key, n: int):
+    """Deterministic 16-feature / 5-class stand-in for the paper's MNIST setup."""
+    kx, kw = jax.random.split(key)
+    xs = jax.random.normal(kx, (n, 16))
+    w_true = jax.random.normal(kw, (16, 5))
+    ys = jax.nn.one_hot(jnp.argmax(xs @ w_true, axis=-1), 5)
+    return xs, ys
+
+
+def train_symbolically(graph, params, key, steps: int = 30, lr: float = 0.05):
+    xs, ys = synthetic_mnist16(key, 64)
+
+    def loss_fn(p):
+        preds = forward_batch(graph, p, xs)
+        eps = 1e-6
+        bce = -(ys * jnp.log(preds + eps) + (1 - ys) * jnp.log(1 - preds + eps))
+        return jnp.mean(bce)
+
+    @jax.jit
+    def step(p):
+        l, g = jax.value_and_grad(loss_fn)(p)
+        p = jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g)
+        return p, l
+
+    losses = []
+    for _ in range(steps):
+        params, l = step(params)
+        losses.append(float(l))
+    return params, losses

@@ -1,0 +1,46 @@
+"""HLS-flavoured timing model for the streaming simulator.
+
+The paper's FIFO-fullness numbers depend on the timing behaviour hls4ml/Vitis
+HLS gives each layer: initiation intervals derived from the reuse factor,
+pipeline fill latencies from line buffers, and board-specific HDL differences
+(§III.C.2: the Pynq-Z2 build registers the dense-layer output, the ZCU102
+build does not — same C++, different HDL, different FIFO profile).
+
+``TimingProfile`` collects those knobs.  ``bitwidth`` is carried for parity
+with the paper's §III.C.8 sweep: it changes resource cost, not timing, which
+is exactly why the paper found FIFO sizes "mostly unchanged" under bitwidth —
+our simulator reproduces that by construction, with an optional
+``bitwidth_ii_bump`` to emulate the one observed case where a wider adder
+changed the schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class TimingProfile:
+    board: str = "zcu102"
+    reuse_factor: int = 1
+    bitwidth: int = 16            # ap_fixed<W,·> of the data path
+    fifo_capacity: int = 4096     # generous: we *measure* demand, like cosim
+    sigmoid_ii: int = 2           # LUT sigmoid initiation interval
+    source_ii: int = 1            # input arrival rate (beats/cycle = 1/source_ii)
+    output_register: bool = False # Pynq-Z2 buffers dense output (+1 latency)
+    # profiling interference (Listing 2): the profile write shares an FSM
+    # state with the data write; every ``pf_period`` firings costs one extra
+    # stall cycle when the in-band (inline) profiler is attached.
+    pf_period: int = 16
+    pf_stall: int = 1
+    # §III.C.8: one observed case where bitwidth nudged an add FIFO by 1 —
+    # emulated as an II bump above a threshold width.
+    bitwidth_ii_bump_threshold: int = 0  # 0 = disabled
+
+    def with_(self, **kw) -> "TimingProfile":
+        return dataclasses.replace(self, **kw)
+
+
+ZCU102 = TimingProfile(board="zcu102", output_register=False)
+PYNQ_Z2 = TimingProfile(board="pynq_z2", output_register=True)
+
+BOARDS = {"zcu102": ZCU102, "pynq_z2": PYNQ_Z2}

@@ -1,0 +1,359 @@
+"""Layer specs for randomly interconnected neural networks (paper §II.B).
+
+Each spec knows three things:
+
+  * shape semantics      — output shape from input shapes;
+  * functional semantics — parameter init + JAX apply (the NN itself);
+  * streaming semantics  — how the layer behaves as a dataflow actor in the
+    hls4ml-style io_stream model: how many stream *beats* its tensors occupy,
+    its pipeline-fill requirement, and its firing pattern.
+
+Streaming granularity follows hls4ml io_stream: image tensors (H, W, C)
+stream as H·W pixel beats (one beat = the C-channel vector); flat vectors
+stream as a single pack beat.  This is what makes the paper's observation
+"Dense-only RINNs never exceed FIFO fullness 1" emerge naturally — a dense
+tensor is one beat, so its FIFO can never hold more than one item in steady
+state — while conv pipelines (line-buffer fill = (k−1)·W + k pixels) create
+real occupancy transients.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Shape = Tuple[int, ...]
+
+
+def beats_for_shape(shape: Shape) -> int:
+    """Stream beats occupied by a tensor of ``shape`` (io_stream granularity)."""
+    if len(shape) == 3:  # (H, W, C): pixel beats
+        return shape[0] * shape[1]
+    return 1  # flat vector: single pack
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """Base class: one node of the RINN dataflow graph."""
+
+    name: str
+
+    # ---------------- shape semantics ----------------
+    def out_shape(self, in_shapes: Sequence[Shape]) -> Shape:
+        raise NotImplementedError
+
+    # ---------------- functional semantics ----------------
+    def init(self, key, in_shapes: Sequence[Shape]):
+        return {}
+
+    def apply(self, params, xs: Sequence[jnp.ndarray]) -> jnp.ndarray:
+        raise NotImplementedError
+
+    # ---------------- streaming semantics ----------------
+    def fill_beats(self, in_shapes: Sequence[Shape], timing) -> int:
+        """Beats that must be consumed before the first output beat."""
+        return 0
+
+    def ii_cycles(self, in_shapes: Sequence[Shape], timing) -> int:
+        """Cycles between consecutive consume firings (initiation interval)."""
+        return 1
+
+    def burst(self) -> bool:
+        """True if outputs are emitted only after the full input is consumed."""
+        return False
+
+    @property
+    def profiled(self) -> bool:
+        """Whether SPRING taps this node's input FIFO (merge/split must be)."""
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
+class InputSpec(LayerSpec):
+    shape: Shape = (16,)
+
+    def out_shape(self, in_shapes):
+        return self.shape
+
+    def apply(self, params, xs):
+        raise RuntimeError("InputSpec has no apply")
+
+    @property
+    def profiled(self) -> bool:
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseSpec(LayerSpec):
+    units: int = 16
+    activation: Optional[str] = None  # None | "relu" | "sigmoid"
+
+    def out_shape(self, in_shapes):
+        (s,) = in_shapes
+        if len(s) != 1:
+            raise ValueError(f"Dense {self.name} needs flat input, got {s}")
+        return (self.units,)
+
+    def init(self, key, in_shapes):
+        (s,) = in_shapes
+        k1, _ = jax.random.split(key)
+        scale = 1.0 / math.sqrt(s[0])
+        return {
+            "w": jax.random.uniform(k1, (s[0], self.units), jnp.float32,
+                                    -scale, scale),
+            "b": jnp.zeros((self.units,), jnp.float32),
+        }
+
+    def apply(self, params, xs):
+        (x,) = xs
+        y = x @ params["w"] + params["b"]
+        if self.activation == "relu":
+            y = jax.nn.relu(y)
+        elif self.activation == "sigmoid":
+            y = jax.nn.sigmoid(y)
+        return y
+
+    def ii_cycles(self, in_shapes, timing):
+        (s,) = in_shapes
+        mults = s[0] * self.units
+        # reuse_factor serializes multipliers: cycles per (pack) firing
+        return max(1, math.ceil(mults / max(1, mults // timing.reuse_factor)))
+
+    def burst(self) -> bool:
+        return True  # emits its single output pack after consuming the input
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv2DSpec(LayerSpec):
+    filters: int = 1
+    kernel: int = 3  # square kernel, 'same' padding, stride 1 (paper's setup)
+
+    def out_shape(self, in_shapes):
+        (s,) = in_shapes
+        if len(s) != 3:
+            raise ValueError(f"Conv2D {self.name} needs (H,W,C), got {s}")
+        return (s[0], s[1], self.filters)
+
+    def init(self, key, in_shapes):
+        (s,) = in_shapes
+        fan_in = self.kernel * self.kernel * s[2]
+        scale = 1.0 / math.sqrt(fan_in)
+        return {
+            "w": jax.random.uniform(
+                key, (self.kernel, self.kernel, s[2], self.filters),
+                jnp.float32, -scale, scale),
+            "b": jnp.zeros((self.filters,), jnp.float32),
+        }
+
+    def apply(self, params, xs):
+        (x,) = xs
+        y = jax.lax.conv_general_dilated(
+            x[None], params["w"],
+            window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )[0]
+        return y + params["b"]
+
+    def fill_beats(self, in_shapes, timing):
+        (s,) = in_shapes
+        # line buffer: (k-1) full rows + k pixels before the first window
+        return (self.kernel - 1) * s[1] + self.kernel
+
+    def ii_cycles(self, in_shapes, timing):
+        (s,) = in_shapes
+        mults = self.kernel * self.kernel * s[2] * self.filters
+        parallel = max(1, mults // timing.reuse_factor)
+        return max(1, math.ceil(mults / parallel))
+
+
+@dataclasses.dataclass(frozen=True)
+class AddSpec(LayerSpec):
+    def out_shape(self, in_shapes):
+        first = in_shapes[0]
+        for s in in_shapes[1:]:
+            if s != first:
+                raise ValueError(f"Add {self.name}: mismatched shapes {in_shapes}")
+        return first
+
+    def apply(self, params, xs):
+        out = xs[0]
+        for x in xs[1:]:
+            out = out + x
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ConcatSpec(LayerSpec):
+    """Channel concat for images, feature concat for flat vectors."""
+
+    def out_shape(self, in_shapes):
+        first = in_shapes[0]
+        if len(first) == 3:
+            for s in in_shapes[1:]:
+                if s[:2] != first[:2]:
+                    raise ValueError(f"Concat {self.name}: spatial mismatch")
+            return (first[0], first[1], sum(s[2] for s in in_shapes))
+        return (sum(s[0] for s in in_shapes),)
+
+    def apply(self, params, xs):
+        return jnp.concatenate(xs, axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReluSpec(LayerSpec):
+    def out_shape(self, in_shapes):
+        return in_shapes[0]
+
+    def apply(self, params, xs):
+        return jax.nn.relu(xs[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class SigmoidSpec(LayerSpec):
+    def out_shape(self, in_shapes):
+        return in_shapes[0]
+
+    def apply(self, params, xs):
+        return jax.nn.sigmoid(xs[0])
+
+    def ii_cycles(self, in_shapes, timing):
+        return timing.sigmoid_ii  # LUT-based sigmoid is slower per beat
+
+
+@dataclasses.dataclass(frozen=True)
+class ReshapeSpec(LayerSpec):
+    target: Shape = ()
+
+    def out_shape(self, in_shapes):
+        (s,) = in_shapes
+        if math.prod(s) != math.prod(self.target):
+            raise ValueError(f"Reshape {self.name}: {s} -> {self.target}")
+        return self.target
+
+    def apply(self, params, xs):
+        return xs[0].reshape(self.target)
+
+    def burst(self) -> bool:
+        # pack -> pixel-stream conversion waits for the full pack
+        return True
+
+    @property
+    def profiled(self) -> bool:
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class FlattenSpec(LayerSpec):
+    def out_shape(self, in_shapes):
+        (s,) = in_shapes
+        return (math.prod(s),)
+
+    def apply(self, params, xs):
+        return xs[0].reshape(-1)
+
+    def burst(self) -> bool:
+        return True  # emits the flat pack once the last pixel arrives
+
+    @property
+    def profiled(self) -> bool:
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class CloneSpec(LayerSpec):
+    """hls4ml clone function: explicit fan-out of a stream (paper splits here)."""
+
+    n_copies: int = 2
+
+    def out_shape(self, in_shapes):
+        return in_shapes[0]
+
+    def apply(self, params, xs):
+        return xs[0]  # graph wiring duplicates the edge
+
+
+@dataclasses.dataclass(frozen=True)
+class MaxPool2DSpec(LayerSpec):
+    """2x2 max pool, stride 2 — paper §IV future work ("more layer types").
+
+    Streaming semantics: consumes a full row plus ``pool`` pixels before the
+    first output, then produces 1 output beat per ``pool*pool`` input beats
+    (a genuine rate-changing actor — exercises the simulator's non-1:1
+    allowance model)."""
+
+    pool: int = 2
+
+    def out_shape(self, in_shapes):
+        (s,) = in_shapes
+        if len(s) != 3 or s[0] % self.pool or s[1] % self.pool:
+            raise ValueError(f"MaxPool {self.name}: bad input {s}")
+        return (s[0] // self.pool, s[1] // self.pool, s[2])
+
+    def apply(self, params, xs):
+        (x,) = xs
+        h, w, c = x.shape
+        p = self.pool
+        return x.reshape(h // p, p, w // p, p, c).max(axis=(1, 3))
+
+    def fill_beats(self, in_shapes, timing):
+        (s,) = in_shapes
+        return (self.pool - 1) * s[1] + self.pool
+
+
+@dataclasses.dataclass(frozen=True)
+class AvgPool2DSpec(MaxPool2DSpec):
+    def apply(self, params, xs):
+        (x,) = xs
+        h, w, c = x.shape
+        p = self.pool
+        return x.reshape(h // p, p, w // p, p, c).mean(axis=(1, 3))
+
+
+@dataclasses.dataclass(frozen=True)
+class DepthwiseConv2DSpec(LayerSpec):
+    """Depthwise (per-channel) conv: conv streaming behaviour, ~C x fewer
+    multipliers, so the II under a given reuse factor is lower."""
+
+    kernel: int = 3
+
+    def out_shape(self, in_shapes):
+        (s,) = in_shapes
+        if len(s) != 3:
+            raise ValueError(f"DWConv {self.name} needs (H,W,C), got {s}")
+        return s
+
+    def init(self, key, in_shapes):
+        (s,) = in_shapes
+        fan_in = self.kernel * self.kernel
+        scale = 1.0 / math.sqrt(fan_in)
+        return {
+            # HWIO with feature_group_count=C: I=1, O=C (one filter/channel)
+            "w": jax.random.uniform(
+                key, (self.kernel, self.kernel, 1, s[2]), jnp.float32,
+                -scale, scale),
+            "b": jnp.zeros((s[2],), jnp.float32),
+        }
+
+    def apply(self, params, xs):
+        (x,) = xs
+        c = x.shape[-1]
+        y = jax.lax.conv_general_dilated(
+            x[None], params["w"],
+            window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=c,
+        )[0]
+        return y + params["b"]
+
+    def fill_beats(self, in_shapes, timing):
+        (s,) = in_shapes
+        return (self.kernel - 1) * s[1] + self.kernel
+
+    def ii_cycles(self, in_shapes, timing):
+        (s,) = in_shapes
+        mults = self.kernel * self.kernel * s[2]   # no cross-channel fan-in
+        parallel = max(1, mults // timing.reuse_factor)
+        return max(1, math.ceil(mults / parallel))

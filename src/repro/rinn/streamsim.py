@@ -1,0 +1,251 @@
+"""Cycle-level streaming dataflow simulator — the "FPGA" of this reproduction.
+
+The paper measures FIFO fullness of hls4ml streaming accelerators on real
+boards and in Vitis co-simulation.  This module replaces the board with a
+synchronous dataflow machine executed entirely under ``jax.lax.while_loop``:
+
+  * every edge is a FIFO with an occupancy counter and a capacity;
+  * every node is a streaming actor: it consumes one beat from *each* input
+    FIFO when all are non-empty and its initiation-interval timer expired,
+    and produces one beat into *all* output FIFOs when its produced count is
+    behind what its pipeline allows and all output FIFOs have space;
+  * conv nodes have a line-buffer fill (``(k−1)·W + k`` beats) before their
+    first output; burst nodes (dense / flatten / reshape) emit only after
+    consuming their whole input; sources emit one beat every ``source_ii``
+    cycles.
+
+Two FIFO measurements come out of a run, mirroring the paper:
+
+  * **cosim fullness**  — true max occupancy over all cycles (what Vitis
+    co-simulation reports);
+  * **profiled fullness** — occupancy sampled *at consumer read moments*
+    (Listing 1 samples ``data.size()`` immediately before ``data.read()``),
+    collected only for edges whose consumer is a profiled node.
+
+When ``profiled=True`` the profiler also *interferes* with the datapath the
+way Listing 2's extra FSM state does: every ``pf_period``-th firing of a
+profiled node stalls ``pf_stall`` extra cycle(s) (the profile-stream write
+shares a state with the data write).  This mechanistically reproduces the
+paper's Table-I discrepancies between cosim and profiled numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graphgen import RinnGraph
+from .hls import TimingProfile
+from .layers import (
+    AddSpec, CloneSpec, ConcatSpec, Conv2DSpec, DenseSpec, FlattenSpec,
+    InputSpec, ReluSpec, ReshapeSpec, SigmoidSpec, beats_for_shape,
+)
+
+
+@dataclasses.dataclass
+class CompiledSim:
+    """Static arrays describing the dataflow machine (numpy, trace-constant)."""
+
+    node_ids: List[str]
+    edge_list: List[Tuple[str, str]]
+    in_edges: np.ndarray    # [N, MAX_IN] edge index or E (dummy)
+    out_edges: np.ndarray   # [N, MAX_OUT] edge index or E (dummy)
+    total_in: np.ndarray    # [N] consume firings
+    total_out: np.ndarray   # [N] produce firings
+    fill: np.ndarray        # [N] effective fill (burst => total_in)
+    ii: np.ndarray          # [N] consume initiation interval (cycles)
+    extra_lat: np.ndarray   # [N] extra drain latency (board output register)
+    is_source: np.ndarray   # [N] bool
+    profiled: np.ndarray    # [N] bool — consumer-side SPRING tap
+    capacity: int
+    source_ii: int
+    pf_period: int
+    pf_stall: int
+    layer_type: Dict[str, str]  # node id -> short type name
+
+
+def compile_graph(graph: RinnGraph, timing: TimingProfile) -> CompiledSim:
+    shapes = graph.shapes()
+    order = graph.topo_order()
+    idx = {nid: i for i, nid in enumerate(order)}
+    edge_list = list(graph.edges)
+    eidx = {e: i for i, e in enumerate(edge_list)}
+    N, E = len(order), len(edge_list)
+
+    max_in = max(1, max(len(graph.predecessors(n)) for n in order))
+    max_out = max(1, max(len(graph.successors(n)) for n in order))
+    in_edges = np.full((N, max_in), E, np.int32)   # E = dummy slot
+    out_edges = np.full((N, max_out), E, np.int32)
+    total_in = np.zeros(N, np.int32)
+    total_out = np.zeros(N, np.int32)
+    fill = np.zeros(N, np.int32)
+    ii = np.ones(N, np.int32)
+    extra = np.zeros(N, np.int32)
+    is_src = np.zeros(N, bool)
+    prof = np.zeros(N, bool)
+    ltype: Dict[str, str] = {}
+
+    for nid in order:
+        i = idx[nid]
+        spec = graph.nodes[nid]
+        preds = graph.predecessors(nid)
+        succs = graph.successors(nid)
+        for k, p in enumerate(preds):
+            in_edges[i, k] = eidx[(p, nid)]
+        for k, d in enumerate(succs):
+            out_edges[i, k] = eidx[(nid, d)]
+        in_shapes = [shapes[p] for p in preds]
+        out_beats = beats_for_shape(shapes[nid])
+        in_beats = beats_for_shape(in_shapes[0]) if in_shapes else 0
+        total_in[i] = in_beats
+        total_out[i] = out_beats
+        is_src[i] = isinstance(spec, InputSpec)
+        prof[i] = spec.profiled and bool(preds)
+        ltype[nid] = type(spec).__name__.replace("Spec", "").lower()
+        if is_src[i]:
+            continue
+        ii[i] = spec.ii_cycles(in_shapes, timing)
+        # §III.C.8 emulation hook: very wide datapaths can change the schedule
+        if (timing.bitwidth_ii_bump_threshold
+                and timing.bitwidth >= timing.bitwidth_ii_bump_threshold
+                and isinstance(spec, AddSpec)):
+            ii[i] += 1
+        if spec.burst():
+            fill[i] = in_beats
+            if timing.output_register and isinstance(spec, DenseSpec):
+                extra[i] = 1  # Pynq-Z2 registers the dense output (§III.C.2)
+        else:
+            fill[i] = min(spec.fill_beats(in_shapes, timing), in_beats)
+
+    return CompiledSim(
+        node_ids=order, edge_list=edge_list,
+        in_edges=in_edges, out_edges=out_edges,
+        total_in=total_in, total_out=total_out, fill=fill, ii=ii,
+        extra_lat=extra, is_source=is_src, profiled=prof,
+        capacity=timing.fifo_capacity, source_ii=timing.source_ii,
+        pf_period=timing.pf_period, pf_stall=timing.pf_stall,
+        layer_type=ltype,
+    )
+
+
+@dataclasses.dataclass
+class SimResult:
+    completed: bool
+    cycles: int
+    fifo_max: Dict[Tuple[str, str], int]       # true max occupancy (cosim)
+    fifo_profiled: Dict[Tuple[str, str], int]  # sampled-at-read max
+    consumer_type: Dict[Tuple[str, str], str]
+
+
+def run_sim(
+    sim: CompiledSim, profiled: bool = False, max_cycles: int = 200_000
+) -> SimResult:
+    """Execute the dataflow machine; pure JAX control flow inside."""
+    N = len(sim.node_ids)
+    E = len(sim.edge_list)
+
+    in_edges = jnp.asarray(sim.in_edges)
+    out_edges = jnp.asarray(sim.out_edges)
+    in_mask = in_edges < E
+    out_mask = out_edges < E
+    total_in = jnp.asarray(sim.total_in)
+    total_out = jnp.asarray(sim.total_out)
+    fill = jnp.asarray(sim.fill)
+    ii = jnp.asarray(sim.ii)
+    extra_lat = jnp.asarray(sim.extra_lat)
+    is_src = jnp.asarray(sim.is_source)
+    prof_node = jnp.asarray(sim.profiled) & profiled
+    cap = sim.capacity
+
+    def body(state):
+        (cyc, fifo, consumed, produced, ii_t, drain_t, src_t, maxf, profmax) = state
+        # fifo has E+1 slots; slot E is the dummy (always 1 item, inf space)
+        in_counts = fifo[in_edges]                       # [N, MAX_IN]
+        in_avail = jnp.all(jnp.where(in_mask, in_counts >= 1, True), axis=1)
+        consume = (in_avail & (ii_t == 0) & (consumed < total_in) & ~is_src)
+
+        # SPRING sampling: data.size() read immediately before data.read()
+        sampled = jnp.zeros(E + 1, fifo.dtype)
+        read_now = consume & prof_node
+        sampled = sampled.at[in_edges.reshape(-1)].max(
+            jnp.where((in_mask & read_now[:, None]).reshape(-1),
+                      in_counts.reshape(-1), 0))
+        profmax = jnp.maximum(profmax, sampled)
+
+        consumed_next = consumed + consume.astype(consumed.dtype)
+
+        # pipeline allowance — generalized rate model: a node that maps
+        # total_in beats to total_out beats produces at rate out/in after
+        # its fill (1:1 nodes reduce to consumed - fill exactly)
+        done_in = consumed_next >= total_in
+        prog = jnp.maximum(consumed_next - fill, 0)
+        safe_in = jnp.maximum(total_in, 1)
+        rate_allowed = jnp.where(
+            total_out == total_in, prog,
+            (prog * total_out) // safe_in)
+        allowed = jnp.where(done_in, total_out,
+                            jnp.clip(rate_allowed, 0, total_out))
+        allowed = jnp.where(is_src, total_out, allowed)
+
+        out_counts = fifo[out_edges]
+        out_space = jnp.all(
+            jnp.where(out_mask, out_counts < cap, True), axis=1)
+        src_ready = jnp.where(is_src, src_t == 0, True)
+        drain_ok = drain_t == 0
+        produce = ((produced < allowed) & out_space & src_ready & drain_ok
+                   & (produced < total_out))
+
+        pops = jnp.zeros(E + 1, fifo.dtype).at[in_edges.reshape(-1)].add(
+            (in_mask & consume[:, None]).reshape(-1).astype(fifo.dtype))
+        pushes = jnp.zeros(E + 1, fifo.dtype).at[out_edges.reshape(-1)].add(
+            (out_mask & produce[:, None]).reshape(-1).astype(fifo.dtype))
+        fifo = fifo - pops + pushes
+        fifo = fifo.at[E].set(1)  # dummy slot stays at 1
+        maxf = jnp.maximum(maxf, fifo)
+
+        produced = produced + produce.astype(produced.dtype)
+
+        # profiling interference (Listing 2): every pf_period-th firing of a
+        # profiled node costs pf_stall extra cycles before the next consume.
+        stall = jnp.where(
+            prof_node & consume & (jnp.mod(consumed_next, sim.pf_period) == 0),
+            sim.pf_stall, 0)
+        ii_t = jnp.where(consume, ii - 1 + stall, jnp.maximum(ii_t - 1, 0))
+        drain_t = jnp.where(done_in & (drain_t > 0), drain_t - 1, drain_t)
+        src_fire = is_src & produce
+        src_t = jnp.where(src_fire, sim.source_ii - 1,
+                          jnp.maximum(src_t - 1, 0))
+        return (cyc + 1, fifo, consumed_next, produced, ii_t, drain_t, src_t,
+                maxf, profmax)
+
+    def cond(state):
+        cyc, fifo, consumed, produced, *_ = state
+        done = jnp.all(produced >= total_out)
+        return (~done) & (cyc < max_cycles)
+
+    z_e = jnp.zeros(E + 1, jnp.int32).at[E].set(1)
+    state = (
+        jnp.int32(0), z_e, jnp.zeros(N, jnp.int32), jnp.zeros(N, jnp.int32),
+        jnp.zeros(N, jnp.int32), extra_lat.astype(jnp.int32),
+        jnp.zeros(N, jnp.int32), z_e, jnp.zeros(E + 1, jnp.int32),
+    )
+    state = jax.lax.while_loop(cond, body, state)
+    cyc, fifo, consumed, produced, ii_t, drain_t, src_t, maxf, profmax = state
+
+    completed = bool(jnp.all(produced >= total_out))
+    maxf_np = np.asarray(maxf)[:E]
+    prof_np = np.asarray(profmax)[:E]
+    node_of = {nid: i for i, nid in enumerate(sim.node_ids)}
+    fifo_max, fifo_prof, ctype = {}, {}, {}
+    for k, (s, d) in enumerate(sim.edge_list):
+        fifo_max[(s, d)] = int(maxf_np[k])
+        ctype[(s, d)] = sim.layer_type[d]
+        if profiled and sim.profiled[node_of[d]]:
+            fifo_prof[(s, d)] = int(prof_np[k])
+    return SimResult(
+        completed=completed, cycles=int(cyc),
+        fifo_max=fifo_max, fifo_profiled=fifo_prof, consumer_type=ctype,
+    )

@@ -1,0 +1,1 @@
+from .step import TrainConfig, make_serve_step, make_train_step

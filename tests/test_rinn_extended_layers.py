@@ -1,0 +1,110 @@
+"""Extended RINN layer types (paper §IV future work: 'more layer types')."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.rinn import (
+    AvgPool2DSpec, CloneSpec, Conv2DSpec, DenseSpec, DepthwiseConv2DSpec,
+    FlattenSpec, InputSpec, MaxPool2DSpec, ReshapeSpec, RinnGraph, ZCU102,
+    compile_graph, cosim_only, run_sim,
+)
+from repro.rinn.graphgen import RinnGraph
+
+
+def pooled_chain(pool_cls=MaxPool2DSpec, kernel=3):
+    """input -> dense -> reshape(8,8,1) -> conv -> pool -> conv -> flatten -> dense."""
+    nodes = {}
+    edges = []
+
+    def add(spec, prev=None):
+        nodes[spec.name] = spec
+        if prev is not None:
+            edges.append((prev, spec.name))
+        return spec.name
+
+    p = add(InputSpec(name="input", shape=(16,)))
+    p = add(DenseSpec(name="dense_in", units=64), p)
+    p = add(ReshapeSpec(name="reshape", target=(8, 8, 1)), p)
+    p = add(Conv2DSpec(name="conv0", filters=2, kernel=kernel), p)
+    p = add(pool_cls(name="pool", pool=2), p)
+    p = add(Conv2DSpec(name="conv1", filters=2, kernel=kernel), p)
+    p = add(FlattenSpec(name="flatten"), p)
+    p = add(DenseSpec(name="dense_out", units=5, activation="sigmoid"), p)
+    g = RinnGraph(nodes=nodes, edges=edges)
+    g.validate()
+    return g
+
+
+@pytest.mark.parametrize("pool_cls", [MaxPool2DSpec, AvgPool2DSpec])
+def test_pool_functional_shapes(pool_cls):
+    from repro.rinn import forward, init_params
+    g = pooled_chain(pool_cls)
+    assert g.shapes()["pool"] == (4, 4, 2)
+    params = init_params(g, jax.random.PRNGKey(0))
+    y, s = forward(g, params, jnp.ones((16,)))
+    assert y.shape == (5,)
+    assert not bool(jnp.isnan(y).any())
+
+
+def test_maxpool_apply_math():
+    spec = MaxPool2DSpec(name="p", pool=2)
+    x = jnp.arange(16.0).reshape(4, 4, 1)
+    y = spec.apply({}, [x])
+    np.testing.assert_allclose(np.asarray(y)[..., 0],
+                               [[5, 7], [13, 15]])
+
+
+def test_pool_streaming_rate_change_completes():
+    """The 4:1 rate-changing actor must stream to completion and keep the
+    downstream conv's FIFO behaviour sane."""
+    g = pooled_chain()
+    res = cosim_only(g, ZCU102)
+    assert res.completed
+    # pool consumes 64 beats, produces 16: conv1's input FIFO stays small
+    assert res.fifo_max[("pool", "conv1")] <= 8
+    # conv0 -> pool link behaves like a normal streaming edge
+    assert res.fifo_max[("conv0", "pool")] >= 1
+
+
+def test_depthwise_conv_functional_and_faster_streaming():
+    from repro.rinn import forward, init_params
+    nodes, edges = {}, []
+
+    def add(spec, prev=None):
+        nodes[spec.name] = spec
+        if prev is not None:
+            edges.append((prev, spec.name))
+        return spec.name
+
+    p = add(InputSpec(name="input", shape=(16,)))
+    p = add(DenseSpec(name="dense_in", units=64), p)
+    p = add(ReshapeSpec(name="reshape", target=(8, 8, 1)), p)
+    p = add(Conv2DSpec(name="conv0", filters=4, kernel=3), p)
+    p = add(DepthwiseConv2DSpec(name="dw", kernel=3), p)
+    p = add(FlattenSpec(name="flatten"), p)
+    p = add(DenseSpec(name="dense_out", units=5, activation="sigmoid"), p)
+    g = RinnGraph(nodes=nodes, edges=edges)
+    g.validate()
+    assert g.shapes()["dw"] == (8, 8, 4)
+
+    params = init_params(g, jax.random.PRNGKey(0))
+    y, _ = forward(g, params, jnp.ones((16,)))
+    assert y.shape == (5,) and not bool(jnp.isnan(y).any())
+
+    # streaming: under a serializing reuse factor the depthwise conv has a
+    # lower II than a full conv of the same shape (C x fewer multipliers)
+    timing = ZCU102.with_(reuse_factor=9)
+    dw_ii = DepthwiseConv2DSpec(name="x", kernel=3).ii_cycles([(8, 8, 4)], timing)
+    full_ii = Conv2DSpec(name="y", filters=4, kernel=3).ii_cycles([(8, 8, 4)],
+                                                                  timing)
+    assert dw_ii <= full_ii
+
+
+def test_pool_in_band_profiling():
+    from repro.rinn import compare
+    g = pooled_chain()
+    rep = compare(g, ZCU102)
+    types = {r.consumer_type for r in rep.rows}
+    assert "maxpool2d" in types          # the pool's input FIFO is profiled
+    assert rep.mean_abs_diff <= 3.0

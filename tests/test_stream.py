@@ -1,0 +1,201 @@
+"""Unit + property tests for the in-band ProfileStream (paper §II.A semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    PLACEHOLDER,
+    FixedPointCodec,
+    Label,
+    ProfileCollector,
+    ProfileStream,
+    TapeSpec,
+    rows_to_stream,
+)
+
+
+def test_append_grows_stream_and_schema():
+    s = ProfileStream.create()
+    s = s.append("conv0/fifo", "fifo_fullness", jnp.float32(29.0))
+    s = s.append("add1/fifo", "fifo_fullness", jnp.array([12.0, 9.0]))
+    assert s.n_words == 3
+    assert s.n_signals == 2
+    d = s.decode()
+    np.testing.assert_allclose(d["conv0/fifo"], [29.0])
+    np.testing.assert_allclose(d["add1/fifo"], [12.0, 9.0])
+
+
+def test_split_semantics_first_branch_carries():
+    s = ProfileStream.create().append("a", "m", 1.0).append("b", "m", 2.0)
+    b0, b1, b2 = s.split(3)
+    assert b0.n_words == 2 and b0.n_signals == 2
+    # non-primary branches: exactly one placeholder word each (paper §II.A)
+    for b in (b1, b2):
+        assert b.n_words == 1 and b.n_signals == 0
+        assert float(b.data[0]) == PLACEHOLDER
+
+
+def test_merge_order_is_first_then_second():
+    a = ProfileStream.create().append("x", "m", 1.0)
+    b = ProfileStream.create().append("y", "m", 2.0)
+    m = ProfileStream.merge(a, b)
+    assert [l.name for l in m.label_list()] == ["x", "y"]
+    np.testing.assert_allclose(np.asarray(m.data), [1.0, 2.0])
+
+
+def test_roundtrip_through_split_merge_preserves_words():
+    s = ProfileStream.create().append("a", "m", jnp.arange(4.0))
+    b0, b1 = s.split(2)
+    b1 = b1.append("branch/t", "m", 7.0)
+    m = ProfileStream.merge(b0, b1)
+    d = m.decode()
+    np.testing.assert_allclose(d["a"], np.arange(4.0))
+    np.testing.assert_allclose(d["branch/t"], [7.0])
+    # placeholder survives in the word stream but is dropped by decode
+    assert m.n_words == 4 + 1 + 1
+
+
+def test_append_stops_gradients():
+    def f(x):
+        s = ProfileStream.create()
+        s = s.append("sig", "act_rms", x * 3.0)
+        # profiling must not contribute to the loss gradient
+        return jnp.sum(x) + jnp.sum(s.data)
+
+    g = jax.grad(f)(jnp.ones((3,)))
+    np.testing.assert_allclose(np.asarray(g), np.ones(3))
+
+
+def test_stream_works_under_jit_as_pytree():
+    @jax.jit
+    def step(x):
+        s = ProfileStream.create()
+        s = s.append("rms", "act_rms", jnp.sqrt(jnp.mean(x**2)))
+        return jnp.sum(x), s
+
+    out, s = step(jnp.full((8,), 2.0))
+    assert s.decode()["rms"][0] == pytest.approx(2.0)
+
+
+def test_decode_rejects_schema_mismatch():
+    s = ProfileStream.create().append("a", "m", 1.0)
+    bad = ProfileStream(jnp.zeros((5,)), s.schema)
+    with pytest.raises(ValueError):
+        bad.decode()
+
+
+# --------------------------------------------------------------------- #
+# property tests
+# --------------------------------------------------------------------- #
+word_lists = st.lists(
+    st.lists(
+        st.floats(min_value=-1e6, max_value=1e6, allow_nan=False, width=32),
+        min_size=1, max_size=5,
+    ),
+    min_size=1, max_size=8,
+)
+
+
+@settings(deadline=None, max_examples=50)
+@given(word_lists)
+def test_property_decode_inverts_append(chunks):
+    s = ProfileStream.create()
+    for i, vals in enumerate(chunks):
+        s = s.append(f"sig{i}", "m", jnp.array(vals, jnp.float32))
+    d = s.decode()
+    assert len(d) == len(chunks)
+    for i, vals in enumerate(chunks):
+        np.testing.assert_allclose(
+            d[f"sig{i}"], np.asarray(vals, np.float32), rtol=1e-6
+        )
+    # total words = sum of sizes; schema is exact cover
+    assert s.n_words == sum(len(v) for v in chunks)
+
+
+@settings(deadline=None, max_examples=50)
+@given(word_lists, st.integers(min_value=2, max_value=4))
+def test_property_split_merge_identity(chunks, n):
+    """split → merge preserves carried words and adds n-1 placeholders."""
+    s = ProfileStream.create()
+    for i, vals in enumerate(chunks):
+        s = s.append(f"sig{i}", "m", jnp.array(vals, jnp.float32))
+    branches = s.split(n)
+    m = ProfileStream.merge(*branches)
+    assert m.n_words == s.n_words + (n - 1)
+    assert m.n_signals == s.n_signals
+    d0, d1 = s.decode(), m.decode()
+    assert set(d0) == set(d1)
+    for k in d0:
+        np.testing.assert_allclose(d0[k], d1[k])
+
+
+@settings(deadline=None, max_examples=40)
+@given(
+    st.integers(min_value=3, max_value=16),
+    st.integers(min_value=0, max_value=10),
+)
+def test_property_fixed_point_codec(total_bits, int_shift):
+    codec = FixedPointCodec(total_bits=total_bits)
+    # representable integers roundtrip exactly
+    v = min(2 ** (total_bits - 1) - 1, int_shift)
+    x = jnp.float32(v)
+    assert float(codec.roundtrip(x)) == pytest.approx(float(v))
+    # values beyond the range saturate and are flagged
+    big = jnp.float32(2 ** (total_bits - 1) + 5)
+    assert bool(codec.overflows(big))
+    assert float(codec.roundtrip(big)) == pytest.approx(codec.max_value)
+
+
+def test_codec_reproduces_paper_fig4_cliff():
+    """Paper: max observed FIFO depth 66 ⇒ bitwidths < ~7 signed overflow."""
+    depth = 66.0
+    assert bool(FixedPointCodec(6).overflows(depth))      # 2^5-1 = 31 < 66
+    assert not bool(FixedPointCodec(8).overflows(depth))  # 2^7-1 = 127 >= 66
+
+
+# --------------------------------------------------------------------- #
+# tape (shortcut policy)
+# --------------------------------------------------------------------- #
+def test_tape_scan_collection_matches_inline():
+    spec = TapeSpec(labels=(Label("rms", "act_rms", 1), Label("mx", "act_absmax", 1)))
+    xs = jnp.stack([jnp.full((4,), float(i + 1)) for i in range(5)])
+
+    def body(carry, x):
+        row = spec.emit({"rms": jnp.sqrt(jnp.mean(x**2)), "mx": jnp.max(jnp.abs(x))})
+        return carry + jnp.sum(x), row
+
+    total, rows = jax.lax.scan(body, jnp.float32(0), xs)
+    stream = rows_to_stream(spec, rows)
+    d = stream.decode()
+    for i in range(5):
+        assert d[f"layer{i}/rms"][0] == pytest.approx(i + 1)
+        assert d[f"layer{i}/mx"][0] == pytest.approx(i + 1)
+
+    # inline equivalent gives identical decoded values (policy equivalence)
+    s = ProfileStream.create()
+    for i in range(5):
+        x = xs[i]
+        s = s.append(f"layer{i}/rms", "act_rms", jnp.sqrt(jnp.mean(x**2)))
+        s = s.append(f"layer{i}/mx", "act_absmax", jnp.max(jnp.abs(x)))
+    d2 = s.decode()
+    for k in d:
+        np.testing.assert_allclose(d[k], d2[k], rtol=1e-6)
+
+
+def test_tape_missing_label_filled_with_placeholder():
+    spec = TapeSpec(labels=(Label("a", "m", 1), Label("b", "m", 2)))
+    row = spec.emit({"a": jnp.float32(5.0)})
+    np.testing.assert_allclose(np.asarray(row), [5.0, -1.0, -1.0])
+
+
+def test_collector_folds_running_max():
+    c = ProfileCollector()
+    for v in [3.0, 9.0, 1.0]:
+        s = ProfileStream.create().append("fifo", "fifo_fullness", v)
+        c.ingest(s)
+    agg = c.signals["fifo"]
+    assert float(agg.max[0]) == 9.0
+    assert float(agg.last[0]) == 1.0
+    assert c.steps == 3
