@@ -5,17 +5,21 @@ the data stream, splitting/merging in synchrony with the dataflow, with a
 statically predetermined label schema — implemented as a composable JAX
 module (see DESIGN.md §2 for the FPGA→TPU mapping).
 """
-from .stream import Label, PLACEHOLDER, ProfileStream, placeholder_label, validate_policy
+from .stream import (
+    INTEGRITY_METRIC, IntegrityReport, Label, PLACEHOLDER, ProfileStream,
+    placeholder_label, validate_policy,
+)
 from .tape import TapeSpec, concat_streams_and_rows, rows_to_stream
-from .codec import FLOAT_FORMATS, FixedPointCodec
+from .codec import FLOAT_FORMATS, FixedPointCodec, verify_checksum, word_checksum
 from .collector import ProfileCollector, SignalAggregate
 from .policies import DagNode, ProfiledDag, RoutingPlan, plan_routing
 from . import metrics
 
 __all__ = [
     "Label", "PLACEHOLDER", "ProfileStream", "placeholder_label", "validate_policy",
+    "INTEGRITY_METRIC", "IntegrityReport",
     "TapeSpec", "concat_streams_and_rows", "rows_to_stream",
-    "FLOAT_FORMATS", "FixedPointCodec",
+    "FLOAT_FORMATS", "FixedPointCodec", "verify_checksum", "word_checksum",
     "ProfileCollector", "SignalAggregate",
     "DagNode", "ProfiledDag", "RoutingPlan", "plan_routing",
     "metrics",

@@ -93,3 +93,37 @@ class FixedPointCodec:
         """True where the value cannot be represented (paper's Fig. 4 cliff)."""
         x = jnp.asarray(x, jnp.float32)
         return (x > self.max_value) | (x < self.min_value)
+
+
+# --------------------------------------------------------------------- #
+# profile-word integrity checksum
+# --------------------------------------------------------------------- #
+CHECKSUM_BITS = 24  # integers < 2**24 survive a float32 word exactly
+
+
+def word_checksum(values: jnp.ndarray) -> jnp.ndarray:
+    """XOR-fold checksum of profile words, exact through a float32 stream.
+
+    Folds the float32 bit patterns of ``values`` into one integer below
+    ``2**CHECKSUM_BITS`` so the checksum itself can ride the stream as an
+    ordinary profile word with zero quantization loss.  Any single bit flip
+    in payload or checksum word changes the fold, so host-side verification
+    catches it.  Pure jnp — safe under jit.
+    """
+    v = jnp.atleast_1d(jnp.asarray(values)).reshape(-1).astype(jnp.float32)
+    bits = jax.lax.bitcast_convert_type(v, jnp.uint32)
+    # mix position in so swapped words are detected too
+    pos = (jnp.arange(bits.shape[0], dtype=jnp.uint32) + jnp.uint32(1))
+    bits = bits ^ (pos * jnp.uint32(0x9E3779B1))
+    folded = jax.lax.reduce(bits, jnp.uint32(0), jax.lax.bitwise_xor, (0,))
+    folded = (folded ^ (folded >> CHECKSUM_BITS)) & jnp.uint32(
+        (1 << CHECKSUM_BITS) - 1)
+    return folded.astype(jnp.float32)
+
+
+def verify_checksum(values, checksum_word) -> bool:
+    """Host-side re-computation; True when the payload is intact."""
+    import numpy as np
+
+    expect = float(np.asarray(jax.device_get(word_checksum(values))))
+    return float(checksum_word) == expect

@@ -10,11 +10,11 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .stream import ProfileStream
+from .stream import IntegrityReport, ProfileStream
 
 
 @dataclasses.dataclass
@@ -32,11 +32,36 @@ class ProfileCollector:
     def __init__(self):
         self._agg: Dict[str, SignalAggregate] = {}
         self.steps = 0
+        self.integrity_failures = 0
+        self.quarantine_counts: Dict[str, int] = {}
+        self._last_integrity: Optional[IntegrityReport] = None
 
     def ingest(self, stream: ProfileStream) -> Dict[str, np.ndarray]:
         decoded = stream.decode()
         self.ingest_decoded(decoded)
         return decoded
+
+    def ingest_verified(
+        self, stream: ProfileStream
+    ) -> Tuple[Dict[str, np.ndarray], IntegrityReport]:
+        """Verified ingest: corrupted signals are quarantined, never folded.
+
+        Intact signals still land in the aggregates, so one flipped bit
+        poisons one signal for one step instead of the whole collection run.
+        """
+        decoded, report = stream.decode_verified()
+        self.ingest_decoded(decoded)
+        self._last_integrity = report
+        if not report.ok:
+            self.integrity_failures += 1
+            for name in report.quarantined:
+                self.quarantine_counts[name] = (
+                    self.quarantine_counts.get(name, 0) + 1)
+        return decoded, report
+
+    @property
+    def last_integrity(self) -> Optional[IntegrityReport]:
+        return self._last_integrity
 
     def ingest_decoded(self, decoded: Dict[str, np.ndarray]) -> None:
         self.steps += 1
@@ -65,6 +90,10 @@ class ProfileCollector:
 
     def report(self) -> str:
         lines = [f"# profile report — {self.steps} step(s), {len(self._agg)} signal(s)"]
+        if self.integrity_failures:
+            lines.append(
+                f"# integrity: {self.integrity_failures} damaged stream(s); "
+                f"quarantines: {self.quarantine_counts}")
         for name in sorted(self._agg):
             a = self._agg[name]
             mx = float(np.max(a.max))

@@ -37,18 +37,25 @@ Two collection policies mirror the paper:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .codec import word_checksum
 
 # Placeholder word written into the fresh stream of a non-primary split
 # branch (paper: "the second output stream is initialized with a placeholder
 # value").
 PLACEHOLDER = -1.0
 
+# Metric tag of the guard words appended by ``append_guarded``: a
+# [sequence, checksum] pair per module record.
+INTEGRITY_METRIC = "integrity"
+
 _VALID_POLICIES = ("off", "inline", "shortcut")
+_NON_SIGNAL_METRICS = ("placeholder", INTEGRITY_METRIC)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,8 +129,12 @@ class ProfileStream:
 
     @property
     def n_signals(self) -> int:
-        """Number of non-placeholder labels (paper counts 'profiled signals')."""
-        return sum(1 for l in self.schema if l.metric != "placeholder")
+        """Number of non-placeholder labels (paper counts 'profiled signals').
+
+        Guard words (``integrity`` labels) are framing, not signals.
+        """
+        return sum(1 for l in self.schema
+                   if l.metric not in _NON_SIGNAL_METRICS)
 
     def __repr__(self):
         return (
@@ -150,6 +161,44 @@ class ProfileStream:
         return ProfileStream(
             jnp.concatenate([self.data, values]), self.schema + (label,)
         )
+
+    def append_guarded(self, name: str, metric: str, values) -> "ProfileStream":
+        """``append`` plus a [sequence, checksum] guard word pair.
+
+        The sequence number counts guarded records already in the stream, so
+        the host detects dropped/duplicated/reordered module records; the
+        checksum covers the payload words, so it detects in-band bit flips.
+        The guard rides the stream as two ordinary profile words — the exact
+        in-band discipline the data words use (nothing out-of-band exists on
+        the fabric).
+        """
+        out = self.append(name, metric, values)
+        payload = out.data[self.n_words:]
+        seq = jnp.full((1,), float(self._next_seq()), dtype=self.dtype)
+        check = word_checksum(payload).astype(self.dtype)[None]
+        guard = Label(name=f"{name}/__guard__", metric=INTEGRITY_METRIC,
+                      size=2)
+        return ProfileStream(
+            jnp.concatenate([out.data, seq, check]), out.schema + (guard,)
+        )
+
+    def _next_seq(self) -> int:
+        return sum(1 for l in self.schema if l.metric == INTEGRITY_METRIC)
+
+    def with_bitflip(self, word_index: int, bitmask: int = 1 << 17
+                     ) -> "ProfileStream":
+        """Fault injection: XOR ``bitmask`` into one word's bit pattern."""
+        bits = jax.lax.bitcast_convert_type(
+            self.data.astype(jnp.float32), jnp.uint32)
+        bits = bits.at[word_index].set(
+            bits[word_index] ^ jnp.uint32(bitmask))
+        flipped = jax.lax.bitcast_convert_type(bits, jnp.float32)
+        return ProfileStream(flipped.astype(self.dtype), self.schema)
+
+    def truncated(self, n_words: int) -> "ProfileStream":
+        """Fault injection: keep only the first ``n_words`` data words (a
+        DMA transfer cut short); the schema still promises the full layout."""
+        return ProfileStream(self.data[:n_words], self.schema)
 
     def split(self, n: int) -> Tuple["ProfileStream", ...]:
         """Stream split in synchrony with a data-stream split (clone).
@@ -206,6 +255,131 @@ class ProfileStream:
                 f"schema covers {cursor} words but stream has {arr.shape[0]}"
             )
         return out
+
+    def decode_verified(self) -> Tuple[Dict[str, np.ndarray], "IntegrityReport"]:
+        """Fault-tolerant positional decode with per-record verification.
+
+        Unlike ``decode`` this never raises on a damaged stream: corrupted
+        records (checksum mismatch) are quarantined, records lost to a
+        truncated transfer are reported missing, sequence-number gaps are
+        flagged, and every intact signal is returned as usual.
+        """
+        arr = np.asarray(jax.device_get(self.data), dtype=np.float64)
+        n = arr.shape[0]
+        out: Dict[str, np.ndarray] = {}
+        status: Dict[str, str] = {}
+        quarantined: List[str] = []
+        missing: List[str] = []
+        seq_errors: List[str] = []
+        seen_seq: List[int] = []
+        cursor = 0
+        pending: Optional[Tuple[str, np.ndarray]] = None  # awaiting guard
+
+        def commit(name: str, words: np.ndarray, ok: bool):
+            if ok:
+                if name in out:
+                    out[name] = np.concatenate([out[name], words])
+                else:
+                    out[name] = words
+                status[name] = "ok" if status.get(name) != "corrupt" else "corrupt"
+            else:
+                quarantined.append(name)
+                status[name] = "corrupt"
+                out.pop(name, None)
+
+        for label in self.schema:
+            lo, hi = cursor, cursor + label.size
+            cursor = hi
+            if hi > n:  # transfer cut short: the record never fully arrived
+                if label.metric not in _NON_SIGNAL_METRICS:
+                    missing.append(label.name)
+                    status[label.name] = "missing"
+                elif label.metric == INTEGRITY_METRIC and pending is not None:
+                    # payload arrived but its guard didn't: keep, unverified
+                    commit(*pending, ok=True)
+                    status[pending[0]] = "unverified"
+                    pending = None
+                continue
+            words = arr[lo:hi]
+            if label.metric == "placeholder":
+                continue
+            if label.metric == INTEGRITY_METRIC:
+                if pending is None:
+                    seq_errors.append(f"orphan guard {label.name}")
+                    continue
+                name, payload = pending
+                pending = None
+                expect = float(np.asarray(jax.device_get(
+                    word_checksum(payload).astype(self.dtype))))
+                commit(name, payload, ok=(float(words[1]) == expect))
+                seq = float(words[0])
+                if np.isfinite(seq) and 0 <= seq < 2**31:
+                    seen_seq.append(int(seq))
+                else:  # corrupted framing word — never crash the decoder
+                    seq_errors.append(f"unreadable sequence word for {name}")
+                continue
+            if pending is not None:  # previous payload had no guard
+                commit(*pending, ok=True)
+                status[pending[0]] = "unverified"
+                pending = None
+            pending = (label.name, words)
+        if pending is not None:  # trailing unguarded record
+            commit(*pending, ok=True)
+            status[pending[0]] = "unverified"
+        # guarded records must count up by 1; a restart at 0 is a legitimate
+        # split-branch boundary, anything else is a gap/dup/reorder
+        for a, b in zip(seen_seq, seen_seq[1:]):
+            if b != a + 1 and b != 0:
+                seq_errors.append(f"sequence break {a}->{b} in {seen_seq}")
+                break
+        report = IntegrityReport(
+            n_words_expected=self.n_words, n_words_received=n,
+            status=status, quarantined=sorted(set(quarantined)),
+            missing=missing, seq_errors=seq_errors,
+            truncated=(n < self.n_words), surplus=max(0, n - self.n_words))
+        return out, report
+
+
+@dataclasses.dataclass
+class IntegrityReport:
+    """Host-side verdict on one decoded profile stream."""
+
+    n_words_expected: int
+    n_words_received: int
+    status: Dict[str, str]          # signal -> ok | unverified | corrupt | missing
+    quarantined: List[str]
+    missing: List[str]
+    seq_errors: List[str]
+    truncated: bool
+    surplus: int
+
+    @property
+    def ok(self) -> bool:
+        return (not self.quarantined and not self.missing
+                and not self.seq_errors and not self.truncated
+                and self.surplus == 0)
+
+    @property
+    def n_corrupt(self) -> int:
+        return len(self.quarantined)
+
+    def summary(self) -> str:
+        if self.ok:
+            return (f"stream intact: {self.n_words_received} words, "
+                    f"{len(self.status)} signal(s) verified")
+        bits = [f"words {self.n_words_received}/{self.n_words_expected}"]
+        if self.quarantined:
+            bits.append(f"quarantined: {', '.join(self.quarantined)}")
+        if self.missing:
+            bits.append(f"missing: {', '.join(self.missing)}")
+        if self.seq_errors:
+            bits.append("; ".join(self.seq_errors))
+        if self.surplus:
+            bits.append(f"{self.surplus} surplus word(s)")
+        return "stream damaged: " + " | ".join(bits)
+
+    def __str__(self) -> str:
+        return self.summary()
 
 
 def validate_policy(policy: str) -> str:

@@ -1,0 +1,63 @@
+"""Version-compat shims for the ``jax.sharding`` surface this repo targets.
+
+The codebase (and its subprocess test scripts) writes against the newer
+mesh API: ``jax.make_mesh(..., axis_types=(jax.sharding.AxisType.Auto,))``.
+Older jaxlib builds (<= 0.4.x) predate ``AxisType`` and the ``axis_types``
+kwarg.  Importing this module (done by ``repro.distributed.__init__``)
+installs both on old versions:
+
+  * ``jax.sharding.AxisType`` — an enum with Auto/Explicit/Manual members;
+  * ``jax.make_mesh`` — wrapped to accept and drop ``axis_types`` (Auto is
+    the only behaviour the old API had, so dropping it is semantics-
+    preserving; requesting Explicit/Manual on an old jax raises).
+
+On new-enough jax both installs are no-ops.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+import jax.sharding
+
+
+class _AxisTypeShim(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _install_axis_type() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisTypeShim
+
+
+def _install_make_mesh_axis_types() -> None:
+    orig = jax.make_mesh
+    if "axis_types" in inspect.signature(orig).parameters:
+        return
+
+    @functools.wraps(orig)
+    def make_mesh(*args, axis_types=None, **kwargs):
+        if axis_types is not None:
+            bad = [t for t in axis_types
+                   if getattr(t, "name", str(t)) != "Auto"]
+            if bad:
+                raise NotImplementedError(
+                    f"axis_types {bad} need jax >= 0.6; this jax "
+                    f"({jax.__version__}) only supports Auto")
+        return orig(*args, **kwargs)
+
+    make_mesh._axis_types_shim = True
+    jax.make_mesh = make_mesh
+
+
+def install() -> None:
+    """Idempotently install all shims."""
+    _install_axis_type()
+    _install_make_mesh_axis_types()
+
+
+install()

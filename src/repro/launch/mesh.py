@@ -13,6 +13,8 @@ from typing import Optional, Tuple
 
 import jax
 
+from repro.distributed import compat as _compat  # noqa: F401  — AxisType shim
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)

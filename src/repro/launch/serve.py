@@ -2,7 +2,9 @@
 
 Greedy-decodes a batch of prompts with the family-appropriate cache
 machinery; the SPRING stream reports per-step cache occupancy and attention
-logit maxima.  CPU example:
+logit maxima.  The profiling path runs under a ``ProfilingSupervisor``: a
+watchdog + integrity verification degrade it gracefully (inline → shortcut →
+off) on repeated faults while the token path keeps serving.  CPU example:
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b --reduced \\
       --batch 4 --prompt-len 16 --gen 16
@@ -10,6 +12,7 @@ logit maxima.  CPU example:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -18,11 +21,118 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.core import ProfileCollector, ProfileStream, metrics as M
+from repro.distributed.fault import (
+    ProfilingSupervisor, RetryPolicy, Watchdog, retry_with_backoff,
+)
 from repro.models import init_params
 from repro.models.api import (
     decode_fn, init_caches, make_batch, model_specs, prefill_fn,
 )
 from repro.train.step import make_serve_step
+
+
+@dataclasses.dataclass
+class ServeResult:
+    tokens: jnp.ndarray
+    collector: ProfileCollector
+    supervisor: ProfilingSupervisor
+    watchdog: Watchdog
+    toks_per_s: float
+
+
+def _profile_step(policy: str, pos: int, max_len: int) -> ProfileStream:
+    """Build this step's profile stream at the supervisor's fidelity rung.
+
+    ``inline`` guards every signal record individually (the faithful
+    mechanism); ``shortcut`` emits one fixed-width guarded record (the
+    tape-style O(L) path — cheaper, coarser framing).
+    """
+    occ = M.kv_occupancy(jnp.full((1,), pos + 1), max_len)
+    s = ProfileStream.create()
+    if policy == "inline":
+        s = s.append_guarded("kv/occupancy", "fifo_fullness", occ)
+        s = s.append_guarded("kv/position", "position",
+                             jnp.full((1,), float(pos + 1)))
+    else:  # shortcut: one guarded record row
+        row = jnp.concatenate([jnp.atleast_1d(occ),
+                               jnp.full((1,), float(pos + 1))])
+        s = s.append_guarded("kv/record", "record_row", row)
+    return s
+
+
+def run_serve(
+    arch: str = "qwen2.5-14b", *, reduced: bool = True, batch: int = 4,
+    prompt_len: int = 16, gen: int = 16, seed: int = 0,
+    profile_policy: str = "inline", failure_threshold: int = 2,
+    overhead_budget: float = 0.25, step_budget_s: float = 5.0,
+    corrupt_every: int = 0,
+) -> ServeResult:
+    """Decode ``gen`` tokens per sequence under profiling supervision.
+
+    ``corrupt_every > 0`` injects a bit flip into every N-th step's profile
+    stream (fault-injection hook): the verified decode quarantines the
+    damaged record, the supervisor counts the strike, and after
+    ``failure_threshold`` consecutive strikes profiling steps down a rung —
+    tokens keep flowing throughout.
+    """
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+
+    specs = model_specs(cfg)
+    params = init_params(specs, jax.random.PRNGKey(seed))
+    max_len = prompt_len + gen
+    caches = init_caches(cfg, batch, max_len)
+
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(seed + 1), (batch, prompt_len),
+        0, cfg.vocab_size, jnp.int32)
+
+    serve_step = jax.jit(make_serve_step(cfg), donate_argnums=(1,),
+                         static_argnums=())
+    collector = ProfileCollector()
+    supervisor = ProfilingSupervisor(
+        policy=profile_policy, failure_threshold=failure_threshold,
+        overhead_budget=overhead_budget)
+    watchdog = Watchdog(budget_s=step_budget_s)
+    retry = RetryPolicy(retries=2, base_delay=0.01)
+
+    # prefill by streaming prompt tokens through the decode path (family-
+    # uniform; attention archs could use the fused prefill_fn instead)
+    t0 = time.time()
+    for pos in range(prompt_len - 1):
+        nxt, caches, rows = retry_with_backoff(
+            serve_step, params, caches, prompts[:, pos:pos + 1], pos,
+            policy=retry)
+    generated = [prompts]
+    tok = prompts[:, -1:]
+    for step_i, pos in enumerate(range(prompt_len - 1, max_len - 1)):
+        t_step = time.time()
+        tok, caches, rows = retry_with_backoff(
+            serve_step, params, caches, tok, pos, policy=retry)
+        generated.append(tok)  # the data path delivers regardless of faults
+        if not supervisor.active:
+            continue
+        t_prof = time.time()
+        s = _profile_step(supervisor.policy, pos, max_len)
+        if corrupt_every and step_i % corrupt_every == 0:
+            s = s.with_bitflip(0)  # in-band fault: payload word bit flip
+        _, report = collector.ingest_verified(s)
+        if not report.ok:
+            supervisor.record_integrity_failure(report.summary())
+            continue
+        dt_step = time.time() - t_step
+        if watchdog.observe(dt_step):
+            supervisor.record_overhead(
+                (time.time() - t_prof) / max(dt_step, 1e-9))
+        else:
+            supervisor.step_ok()
+    dt = time.time() - t0
+
+    out = jnp.concatenate(generated, axis=1)
+    return ServeResult(
+        tokens=out, collector=collector, supervisor=supervisor,
+        watchdog=watchdog, toks_per_s=batch * (max_len - 1) / dt)
 
 
 def main(argv=None):
@@ -33,48 +143,22 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--profile-policy", choices=("inline", "shortcut", "off"),
+                    default="inline")
+    ap.add_argument("--corrupt-every", type=int, default=0,
+                    help="fault injection: flip a bit in every N-th step's "
+                         "profile stream")
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-
-    specs = model_specs(cfg)
-    params = init_params(specs, jax.random.PRNGKey(args.seed))
-    max_len = args.prompt_len + args.gen
-    caches = init_caches(cfg, args.batch, max_len)
-
-    prompts = jax.random.randint(
-        jax.random.PRNGKey(args.seed + 1), (args.batch, args.prompt_len),
-        0, cfg.vocab_size, jnp.int32)
-
-    serve_step = jax.jit(make_serve_step(cfg), donate_argnums=(1,),
-                         static_argnums=())
-    collector = ProfileCollector()
-
-    # prefill by streaming prompt tokens through the decode path (family-
-    # uniform; attention archs could use the fused prefill_fn instead)
-    tok = prompts[:, :1]
-    t0 = time.time()
-    for pos in range(args.prompt_len - 1):
-        nxt, caches, rows = serve_step(params, caches, prompts[:, pos:pos+1],
-                                       pos)
-    generated = [prompts]
-    tok = prompts[:, -1:]
-    for pos in range(args.prompt_len - 1, max_len - 1):
-        tok, caches, rows = serve_step(params, caches, tok, pos)
-        generated.append(tok)
-        # SPRING: cache occupancy + per-layer rows land in the collector
-        s = ProfileStream.create()
-        s = s.append("kv/occupancy", "fifo_fullness",
-                     M.kv_occupancy(jnp.full((1,), pos + 1), max_len))
-        collector.ingest(s)
-    dt = time.time() - t0
-
-    out = jnp.concatenate(generated, axis=1)
-    toks_per_s = args.batch * (max_len - 1) / dt
-    print(f"decoded {out.shape} in {dt:.2f}s ({toks_per_s:.1f} tok/s host)")
-    print(collector.report())
+    res = run_serve(
+        args.arch, reduced=args.reduced, batch=args.batch,
+        prompt_len=args.prompt_len, gen=args.gen, seed=args.seed,
+        profile_policy=args.profile_policy,
+        corrupt_every=args.corrupt_every)
+    out = res.tokens
+    print(f"decoded {out.shape} ({res.toks_per_s:.1f} tok/s host)")
+    print(res.supervisor.summary())
+    print(res.collector.report())
     return out
 
 

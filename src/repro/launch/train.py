@@ -26,7 +26,8 @@ from repro.distributed import (
     activation_sharding, batch_shardings, default_rules, param_shardings,
 )
 from repro.distributed.fault import (
-    FaultTolerantLoop, Heartbeats, PreemptionGuard,
+    FaultTolerantLoop, Heartbeats, PreemptionGuard, ProfilingSupervisor,
+    RetryPolicy, Watchdog, retry_with_backoff,
 )
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import init_params
@@ -54,6 +55,10 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--profile-report", default=None,
                     help="write the SPRING profile report here")
+    ap.add_argument("--profile-policy",
+                    choices=("inline", "shortcut", "off"), default="inline")
+    ap.add_argument("--step-budget-s", type=float, default=30.0,
+                    help="watchdog wall-clock budget per train step")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -91,13 +96,33 @@ def main(argv=None):
     spec = tape_spec(cfg)
     hb = Heartbeats(n_hosts=1)
     guard = PreemptionGuard()
+    supervisor = ProfilingSupervisor(policy=args.profile_policy)
+    watchdog = Watchdog(budget_s=args.step_budget_s)
+    retry = RetryPolicy(retries=2, base_delay=0.02)
+
+    def ingest_rows(rows):
+        # host-side decode path: verified, retried, and supervised — a
+        # damaged stream quarantines one step's signals, never kills training
+        stream = rows_to_stream(spec, rows, layer_prefix="block")
+        _, report = retry_with_backoff(
+            collector.ingest_verified, stream, policy=retry)
+        if not report.ok:
+            supervisor.record_integrity_failure(report.summary())
+        else:
+            supervisor.step_ok()
 
     def step_fn(state, batch):
         params, opt_state = state
         b = {k: jnp.asarray(v) for k, v in batch.items()}
+        t0 = time.time()
         params, opt_state, metrics, rows = jit_step(params, opt_state, b)
-        if rows is not None and rows.size:
-            collector.ingest(rows_to_stream(spec, rows, layer_prefix="block"))
+        dt = time.time() - t0
+        if supervisor.active and rows is not None and rows.size:
+            t_prof = time.time()
+            ingest_rows(rows)
+            if watchdog.observe(dt):
+                supervisor.record_overhead(
+                    (time.time() - t_prof) / max(dt, 1e-9))
         return (params, opt_state), metrics
 
     loop = FaultTolerantLoop(
@@ -129,6 +154,8 @@ def main(argv=None):
     print(f"finished at step {end_step}; "
           f"data-queue max fullness = {prefetch.queue_fullness} "
           f"(SPRING host FIFO signal)")
+    if supervisor.events or collector.integrity_failures:
+        print(supervisor.summary())
     if losses:
         print(f"loss: first={losses[0]:.4f} last={losses[-1]:.4f}")
     if args.profile_report:

@@ -10,8 +10,14 @@ from .build import (
     forward, forward_batch, init_params, synthetic_mnist16,
     to_profiled_dag, train_symbolically,
 )
-from .streamsim import CompiledSim, SimResult, compile_graph, run_sim
-from .cosim import CosimReport, FifoRow, compare, cosim_only
+from .streamsim import (
+    BeatFault, CapacityFault, CompiledSim, FaultPlan, NodeStall, SimResult,
+    WordCorruption, compile_graph, run_sim,
+)
+from .cosim import (
+    BlockedActor, CosimReport, DeadlockError, DeadlockReport, FifoRow,
+    RemediationAttempt, compare, cosim_only, diagnose, run_with_remediation,
+)
 
 __all__ = [
     "PATTERNS", "RinnConfig", "RinnGraph", "generate_rinn",
@@ -23,5 +29,8 @@ __all__ = [
     "forward", "forward_batch", "init_params", "synthetic_mnist16",
     "to_profiled_dag", "train_symbolically",
     "CompiledSim", "SimResult", "compile_graph", "run_sim",
+    "BeatFault", "CapacityFault", "FaultPlan", "NodeStall", "WordCorruption",
     "CosimReport", "FifoRow", "compare", "cosim_only",
+    "BlockedActor", "DeadlockError", "DeadlockReport", "RemediationAttempt",
+    "diagnose", "run_with_remediation",
 ]

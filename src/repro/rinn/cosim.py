@@ -14,13 +14,210 @@ average |cosim − profiled| = 0.997, max 6 on its RINN set).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from .graphgen import RinnGraph
 from .hls import TimingProfile
-from .streamsim import CompiledSim, SimResult, compile_graph, run_sim
+from .streamsim import (
+    CompiledSim, FaultPlan, SimResult, compile_graph, run_sim,
+)
+
+Edge = Tuple[str, str]
+
+
+# --------------------------------------------------------------------- #
+# deadlock diagnosis
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class BlockedActor:
+    """One stuck actor and what it is waiting on at the no-progress point."""
+
+    node: str
+    layer_type: str
+    consumed: int
+    total_in: int
+    produced: int
+    total_out: int
+    empty_inputs: List[Edge]   # starved: waiting for data that never comes
+    full_outputs: List[Edge]   # backpressured: waiting for space
+
+    @property
+    def reason(self) -> str:
+        if self.full_outputs and not self.empty_inputs:
+            return "backpressure"
+        if self.empty_inputs and not self.full_outputs:
+            return "starvation"
+        if self.empty_inputs and self.full_outputs:
+            return "mixed"
+        return "rate-limited"
+
+
+@dataclasses.dataclass
+class DeadlockReport:
+    """Structured post-mortem of a stalled dataflow run.
+
+    ``blocked`` is the cycle of actors with unmet dependencies; ``full_edges``
+    are the FIFOs at capacity (the FIFOAdvisor-style remediation targets) and
+    ``empty_edges`` the starved inputs of blocked consumers.
+    """
+
+    cycle: int
+    idle_cycles: int
+    blocked: List[BlockedActor]
+    full_edges: List[Edge]
+    empty_edges: List[Edge]
+    capacities: Dict[Edge, int]
+    faults: Optional[FaultPlan] = None
+
+    @property
+    def blocked_edge_set(self) -> List[Edge]:
+        return sorted(set(self.full_edges) | set(self.empty_edges))
+
+    @property
+    def capacity_induced(self) -> bool:
+        """True when at least one FIFO is at capacity — growing it can help."""
+        return bool(self.full_edges)
+
+    def suggested_capacities(self, growth: int = 2) -> Dict[Edge, int]:
+        return {e: max(2, self.capacities[e] * growth) for e in self.full_edges}
+
+    def summary(self) -> str:
+        lines = [
+            f"deadlock at cycle {self.cycle} "
+            f"(no progress for {self.idle_cycles} cycles); "
+            f"{len(self.blocked)} blocked actor(s), "
+            f"{len(self.full_edges)} full / {len(self.empty_edges)} starved "
+            f"FIFO(s)"
+        ]
+        for a in self.blocked:
+            waits = ([f"full {'->'.join(e)}" for e in a.full_outputs]
+                     + [f"empty {'->'.join(e)}" for e in a.empty_inputs])
+            lines.append(
+                f"  {a.node:14s} [{a.layer_type}] {a.reason:12s} "
+                f"in {a.consumed}/{a.total_in} out {a.produced}/{a.total_out}"
+                + (f"  waits on: {', '.join(waits)}" if waits else ""))
+        if self.capacity_induced:
+            sug = self.suggested_capacities()
+            lines.append("  remediation: grow "
+                         + ", ".join(f"{'->'.join(e)}:{self.capacities[e]}"
+                                     f"->{c}" for e, c in sorted(sug.items())))
+        if self.faults is not None and self.faults.n_faults:
+            lines.append(f"  active fault plan: seed={self.faults.seed} "
+                         f"({self.faults.n_faults} fault(s))")
+        return "\n".join(lines)
+
+    def __str__(self) -> str:
+        return self.summary()
+
+
+class DeadlockError(RuntimeError):
+    """Raised when a simulation stalls; carries the structured report."""
+
+    def __init__(self, report: DeadlockReport):
+        super().__init__(report.summary())
+        self.report = report
+
+
+def diagnose(sim: CompiledSim, res: SimResult) -> DeadlockReport:
+    """Extract the blocked cycle of actors from a stalled run's final state."""
+    node_of = {nid: i for i, nid in enumerate(sim.node_ids)}
+    in_of: Dict[str, List[Edge]] = {n: [] for n in sim.node_ids}
+    out_of: Dict[str, List[Edge]] = {n: [] for n in sim.node_ids}
+    for (s, d) in sim.edge_list:
+        out_of[s].append((s, d))
+        in_of[d].append((s, d))
+
+    blocked: List[BlockedActor] = []
+    full_edges: List[Edge] = []
+    empty_edges: List[Edge] = []
+    for e in sim.edge_list:
+        if res.fifo_final[e] >= res.fifo_capacity[e]:
+            full_edges.append(e)
+    for nid in sim.node_ids:
+        i = node_of[nid]
+        tin, tout = int(sim.total_in[i]), int(sim.total_out[i])
+        cons, prod = res.node_consumed[nid], res.node_produced[nid]
+        if prod >= tout:
+            continue  # finished actor, not part of the blocked cycle
+        empties = ([e for e in in_of[nid] if res.fifo_final[e] == 0]
+                   if (cons < tin and not sim.is_source[i]) else [])
+        fulls = [e for e in out_of[nid]
+                 if res.fifo_final[e] >= res.fifo_capacity[e]]
+        blocked.append(BlockedActor(
+            node=nid, layer_type=sim.layer_type.get(nid, "input"),
+            consumed=cons, total_in=tin, produced=prod, total_out=tout,
+            empty_inputs=empties, full_outputs=fulls))
+        empty_edges.extend(empties)
+    return DeadlockReport(
+        cycle=res.cycles, idle_cycles=res.idle_cycles, blocked=blocked,
+        full_edges=sorted(set(full_edges)),
+        empty_edges=sorted(set(empty_edges)),
+        capacities=dict(res.fifo_capacity), faults=res.faults)
+
+
+# --------------------------------------------------------------------- #
+# FIFOAdvisor-style auto-remediation: grow the full FIFOs and re-run
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class RemediationAttempt:
+    attempt: int
+    overrides: Dict[Edge, int]
+    completed: bool
+    report: Optional[DeadlockReport]
+
+
+def run_with_remediation(
+    sim: CompiledSim, *, profiled: bool = False, max_cycles: int = 200_000,
+    faults: Optional[FaultPlan] = None, budget: int = 6, growth: int = 2,
+) -> Tuple[SimResult, List[RemediationAttempt]]:
+    """Run; on a capacity-induced deadlock, grow the full FIFOs and retry.
+
+    Sizing loop: every edge ever observed at capacity is grown geometrically
+    per attempt (``base * growth**attempt``), capped at its worst-case demand
+    bound — the producer's total beat count, which provably removes
+    backpressure on that edge.  Stops early when the deadlock is not
+    capacity-induced (starvation from a dropped beat cannot be sized away)
+    or the budget is spent.  Returns the last result plus the attempt log;
+    never raises.
+    """
+    node_of = {nid: i for i, nid in enumerate(sim.node_ids)}
+    bound = {e: max(2, int(sim.total_out[node_of[e[0]]]))
+             for e in sim.edge_list}
+    base_cap = {e: sim.capacity for e in sim.edge_list}
+    for cf in (faults.capacities if faults else ()):
+        base_cap[cf.edge] = cf.capacity
+    in_of: Dict[str, List[Edge]] = {}
+    for e in sim.edge_list:
+        in_of.setdefault(e[1], []).append(e)
+
+    ever_full: set = set()
+    attempts: List[RemediationAttempt] = []
+    res = run_sim(sim, profiled=profiled, max_cycles=max_cycles,
+                  faults=faults)
+    for k in range(budget):
+        if res.completed:
+            break
+        report = diagnose(sim, res)
+        if not report.capacity_induced:
+            attempts.append(RemediationAttempt(
+                attempt=k, overrides={}, completed=False, report=report))
+            break
+        # a full merge input means the consumer's whole in-edge group shares
+        # the skew — grow siblings together instead of rediscovering them
+        # one deadlock at a time
+        for e in report.full_edges:
+            ever_full |= set(in_of[e[1]])
+        overrides = {
+            e: min(bound[e], max(2, base_cap[e]) * growth ** (k + 1))
+            for e in ever_full}
+        res = run_sim(sim, profiled=profiled, max_cycles=max_cycles,
+                      faults=faults, capacity_overrides=overrides)
+        attempts.append(RemediationAttempt(
+            attempt=k, overrides=overrides, completed=res.completed,
+            report=None if res.completed else diagnose(sim, res)))
+    return res, attempts
 
 
 @dataclasses.dataclass
@@ -41,6 +238,8 @@ class CosimReport:
     cycles_unprofiled: int
     cycles_profiled: int
     completed: bool
+    remediation: List[RemediationAttempt] = dataclasses.field(
+        default_factory=list)
 
     @property
     def n_signals(self) -> int:
@@ -81,14 +280,28 @@ class CosimReport:
 
 
 def compare(graph: RinnGraph, timing: TimingProfile,
-            max_cycles: int = 200_000) -> CosimReport:
+            max_cycles: int = 200_000, *,
+            faults: Optional[FaultPlan] = None,
+            auto_remediate: bool = False,
+            remediation_budget: int = 6) -> CosimReport:
     sim = compile_graph(graph, timing)
-    ref = run_sim(sim, profiled=False, max_cycles=max_cycles)
-    prof = run_sim(sim, profiled=True, max_cycles=max_cycles)
-    if not (ref.completed and prof.completed):
-        raise RuntimeError(
-            f"simulation deadlocked (unprofiled={ref.completed}, "
-            f"profiled={prof.completed}); raise fifo_capacity or max_cycles")
+    attempts: List[RemediationAttempt] = []
+    if auto_remediate:
+        ref, a1 = run_with_remediation(
+            sim, profiled=False, max_cycles=max_cycles, faults=faults,
+            budget=remediation_budget)
+        prof, a2 = run_with_remediation(
+            sim, profiled=True, max_cycles=max_cycles, faults=faults,
+            budget=remediation_budget)
+        attempts = a1 + a2
+    else:
+        ref = run_sim(sim, profiled=False, max_cycles=max_cycles,
+                      faults=faults)
+        prof = run_sim(sim, profiled=True, max_cycles=max_cycles,
+                       faults=faults)
+    for res in (ref, prof):
+        if not res.completed:
+            raise DeadlockError(diagnose(sim, res))
     rows = [
         FifoRow(edge=e, consumer_type=prof.consumer_type[e],
                 cosim=ref.fifo_max[e], profiled=prof.fifo_profiled[e])
@@ -96,14 +309,23 @@ def compare(graph: RinnGraph, timing: TimingProfile,
     ]
     return CosimReport(
         rows=rows, cycles_unprofiled=ref.cycles,
-        cycles_profiled=prof.cycles, completed=True,
+        cycles_profiled=prof.cycles, completed=True, remediation=attempts,
     )
 
 
 def cosim_only(graph: RinnGraph, timing: TimingProfile,
-               max_cycles: int = 200_000) -> SimResult:
+               max_cycles: int = 200_000, *,
+               faults: Optional[FaultPlan] = None,
+               auto_remediate: bool = False,
+               remediation_budget: int = 6) -> SimResult:
     sim = compile_graph(graph, timing)
-    res = run_sim(sim, profiled=False, max_cycles=max_cycles)
+    if auto_remediate:
+        res, _ = run_with_remediation(
+            sim, profiled=False, max_cycles=max_cycles, faults=faults,
+            budget=remediation_budget)
+    else:
+        res = run_sim(sim, profiled=False, max_cycles=max_cycles,
+                      faults=faults)
     if not res.completed:
-        raise RuntimeError("simulation deadlocked")
+        raise DeadlockError(diagnose(sim, res))
     return res

@@ -31,7 +31,8 @@ paper's Table-I discrepancies between cosim and profiled numbers.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+import random
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -131,6 +132,118 @@ def compile_graph(graph: RinnGraph, timing: TimingProfile) -> CompiledSim:
     )
 
 
+# --------------------------------------------------------------------- #
+# fault injection
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class NodeStall:
+    """Transient actor stall: ``node`` can neither consume nor produce for
+    cycles in ``[start, start + duration)`` — a hung AXI handshake."""
+
+    node: str
+    start: int
+    duration: int
+
+
+@dataclasses.dataclass(frozen=True)
+class BeatFault:
+    """Drop or duplicate the ``beat``-th beat pushed onto ``edge``.
+
+    A drop starves the consumer (the producer believes it fired); a dup
+    leaves a surplus beat in the FIFO.  Both are wire-level faults the
+    producer's own bookkeeping cannot see.
+    """
+
+    edge: Tuple[str, str]
+    beat: int
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityFault:
+    """Override one edge's FIFO capacity (a mis-sized FIFO in the build)."""
+
+    edge: Tuple[str, str]
+    capacity: int
+
+
+@dataclasses.dataclass(frozen=True)
+class WordCorruption:
+    """XOR ``bitmask`` into the stored profile word of ``edge`` at ``cycle``
+    — an in-fabric bit flip of the profile-stream payload."""
+
+    edge: Tuple[str, str]
+    cycle: int
+    bitmask: int = 1 << 20
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A seeded, deterministic set of faults injected into one run.
+
+    Every member is static data compiled into trace-constant arrays, so two
+    runs with the same plan (or plans from the same seed) are bit-identical.
+    """
+
+    seed: int = 0
+    stalls: Tuple[NodeStall, ...] = ()
+    drops: Tuple[BeatFault, ...] = ()
+    dups: Tuple[BeatFault, ...] = ()
+    capacities: Tuple[CapacityFault, ...] = ()
+    corruptions: Tuple[WordCorruption, ...] = ()
+
+    @property
+    def n_faults(self) -> int:
+        return (len(self.stalls) + len(self.drops) + len(self.dups)
+                + len(self.capacities) + len(self.corruptions))
+
+    def max_stall(self) -> int:
+        return max((s.duration for s in self.stalls), default=0)
+
+    @classmethod
+    def generate(
+        cls,
+        sim: "CompiledSim",
+        seed: int,
+        *,
+        n_stalls: int = 1,
+        n_drops: int = 0,
+        n_dups: int = 0,
+        n_corruptions: int = 1,
+        stall_span: Tuple[int, int] = (5, 40),
+        horizon: int = 2000,
+    ) -> "FaultPlan":
+        """Draw a deterministic plan against a compiled machine."""
+        rnd = random.Random(seed)
+        actors = [n for n, src in zip(sim.node_ids, sim.is_source) if not src]
+        cons = _consumer_index(sim)
+        prof_edges = [e for e, ci in zip(sim.edge_list, cons)
+                      if sim.profiled[ci]] or list(sim.edge_list)
+        stalls = tuple(
+            NodeStall(node=rnd.choice(actors),
+                      start=rnd.randrange(1, horizon),
+                      duration=rnd.randint(*stall_span))
+            for _ in range(n_stalls))
+        drops = tuple(
+            BeatFault(edge=rnd.choice(sim.edge_list),
+                      beat=rnd.randrange(0, 8))
+            for _ in range(n_drops))
+        dups = tuple(
+            BeatFault(edge=rnd.choice(sim.edge_list),
+                      beat=rnd.randrange(0, 8))
+            for _ in range(n_dups))
+        corruptions = tuple(
+            WordCorruption(edge=rnd.choice(prof_edges),
+                           cycle=rnd.randrange(1, horizon))
+            for _ in range(n_corruptions))
+        return cls(seed=seed, stalls=stalls, drops=drops, dups=dups,
+                   corruptions=corruptions)
+
+
+def _consumer_index(sim: "CompiledSim") -> List[int]:
+    node_of = {nid: i for i, nid in enumerate(sim.node_ids)}
+    return [node_of[d] for (_, d) in sim.edge_list]
+
+
 @dataclasses.dataclass
 class SimResult:
     completed: bool
@@ -138,14 +251,37 @@ class SimResult:
     fifo_max: Dict[Tuple[str, str], int]       # true max occupancy (cosim)
     fifo_profiled: Dict[Tuple[str, str], int]  # sampled-at-read max
     consumer_type: Dict[Tuple[str, str], str]
+    # final-state diagnostics (fault/deadlock analysis — see rinn.cosim)
+    deadlocked: bool = False
+    idle_cycles: int = 0
+    fifo_final: Dict[Tuple[str, str], int] = dataclasses.field(
+        default_factory=dict)
+    fifo_capacity: Dict[Tuple[str, str], int] = dataclasses.field(
+        default_factory=dict)
+    node_consumed: Dict[str, int] = dataclasses.field(default_factory=dict)
+    node_produced: Dict[str, int] = dataclasses.field(default_factory=dict)
+    faults: Optional[FaultPlan] = None
 
 
 def run_sim(
-    sim: CompiledSim, profiled: bool = False, max_cycles: int = 200_000
+    sim: CompiledSim, profiled: bool = False, max_cycles: int = 200_000,
+    faults: Optional[FaultPlan] = None,
+    capacity_overrides: Optional[Dict[Tuple[str, str], int]] = None,
 ) -> SimResult:
-    """Execute the dataflow machine; pure JAX control flow inside."""
+    """Execute the dataflow machine; pure JAX control flow inside.
+
+    ``faults`` injects the plan's stalls / beat faults / capacity faults /
+    profile-word bit flips; ``capacity_overrides`` grows or shrinks specific
+    edges' FIFOs (the remediation hook — it wins over the plan's capacity
+    faults).  A no-progress detector stops the loop once no actor has fired
+    for longer than any legitimate quiet period, so deadlocks terminate in
+    O(deadlock cycle) rather than O(max_cycles).
+    """
     N = len(sim.node_ids)
     E = len(sim.edge_list)
+    plan = faults or FaultPlan()
+    node_of = {nid: i for i, nid in enumerate(sim.node_ids)}
+    eidx = {e: i for i, e in enumerate(sim.edge_list)}
 
     in_edges = jnp.asarray(sim.in_edges)
     out_edges = jnp.asarray(sim.out_edges)
@@ -158,14 +294,60 @@ def run_sim(
     extra_lat = jnp.asarray(sim.extra_lat)
     is_src = jnp.asarray(sim.is_source)
     prof_node = jnp.asarray(sim.profiled) & profiled
-    cap = sim.capacity
+
+    # per-edge capacity: base, then plan faults, then remediation overrides
+    cap_np = np.full(E + 1, sim.capacity, np.int32)
+    cap_np[E] = np.iinfo(np.int32).max // 2  # dummy slot: infinite space
+    for cf in plan.capacities:
+        cap_np[eidx[cf.edge]] = cf.capacity
+    for e, c in (capacity_overrides or {}).items():
+        cap_np[eidx[e]] = c
+    cap_e = jnp.asarray(cap_np)
+
+    # transient stalls -> [N, S] start/end windows (S >= 1, -1 padded)
+    S = max(1, max((sum(1 for s in plan.stalls if s.node == n)
+                    for n in sim.node_ids), default=1))
+    st_start = np.full((N, S), -1, np.int32)
+    st_end = np.full((N, S), -1, np.int32)
+    slot = {nid: 0 for nid in sim.node_ids}
+    for s in plan.stalls:
+        i, k = node_of[s.node], slot[s.node]
+        st_start[i, k], st_end[i, k] = s.start, s.start + s.duration
+        slot[s.node] = k + 1
+    st_start_j, st_end_j = jnp.asarray(st_start), jnp.asarray(st_end)
+
+    # wire-level beat faults -> per-edge target beat index (-1 = none)
+    drop_beat = np.full(E + 1, -1, np.int32)
+    dup_beat = np.full(E + 1, -1, np.int32)
+    for bf in plan.drops:
+        drop_beat[eidx[bf.edge]] = bf.beat
+    for bf in plan.dups:
+        dup_beat[eidx[bf.edge]] = bf.beat
+    drop_beat_j, dup_beat_j = jnp.asarray(drop_beat), jnp.asarray(dup_beat)
+
+    # profile-word bit flips -> per-edge (cycle, mask), -1 = none
+    cor_cycle = np.full(E + 1, -1, np.int32)
+    cor_mask = np.zeros(E + 1, np.int32)
+    for wc in plan.corruptions:
+        cor_cycle[eidx[wc.edge]] = wc.cycle
+        cor_mask[eidx[wc.edge]] = wc.bitmask
+    cor_cycle_j, cor_mask_j = jnp.asarray(cor_cycle), jnp.asarray(cor_mask)
+
+    # longest legitimate quiet period: ii timers, source cadence, profiling
+    # stalls, drain latency, and any injected stall window
+    idle_limit = int(
+        2 * (int(sim.ii.max(initial=1)) + sim.source_ii + sim.pf_stall)
+        + int(sim.extra_lat.max(initial=0)) + plan.max_stall() + 16)
 
     def body(state):
-        (cyc, fifo, consumed, produced, ii_t, drain_t, src_t, maxf, profmax) = state
+        (cyc, fifo, consumed, produced, ii_t, drain_t, src_t, maxf, profmax,
+         epush, idle) = state
+        stalled = jnp.any((cyc >= st_start_j) & (cyc < st_end_j), axis=1)
         # fifo has E+1 slots; slot E is the dummy (always 1 item, inf space)
         in_counts = fifo[in_edges]                       # [N, MAX_IN]
         in_avail = jnp.all(jnp.where(in_mask, in_counts >= 1, True), axis=1)
-        consume = (in_avail & (ii_t == 0) & (consumed < total_in) & ~is_src)
+        consume = (in_avail & (ii_t == 0) & (consumed < total_in) & ~is_src
+                   & ~stalled)
 
         # SPRING sampling: data.size() read immediately before data.read()
         sampled = jnp.zeros(E + 1, fifo.dtype)
@@ -192,19 +374,31 @@ def run_sim(
 
         out_counts = fifo[out_edges]
         out_space = jnp.all(
-            jnp.where(out_mask, out_counts < cap, True), axis=1)
+            jnp.where(out_mask, out_counts < cap_e[out_edges], True), axis=1)
         src_ready = jnp.where(is_src, src_t == 0, True)
         drain_ok = drain_t == 0
         produce = ((produced < allowed) & out_space & src_ready & drain_ok
-                   & (produced < total_out))
+                   & (produced < total_out) & ~stalled)
 
         pops = jnp.zeros(E + 1, fifo.dtype).at[in_edges.reshape(-1)].add(
             (in_mask & consume[:, None]).reshape(-1).astype(fifo.dtype))
         pushes = jnp.zeros(E + 1, fifo.dtype).at[out_edges.reshape(-1)].add(
             (out_mask & produce[:, None]).reshape(-1).astype(fifo.dtype))
+        # wire faults: the producer fired, but the targeted beat never lands
+        # (drop) or lands twice (dup) — invisible to its own bookkeeping
+        will_push = pushes > 0
+        drop_hit = will_push & (epush == drop_beat_j)
+        dup_hit = will_push & (epush == dup_beat_j)
+        pushes = (pushes - drop_hit.astype(fifo.dtype)
+                  + dup_hit.astype(fifo.dtype))
+        epush = epush + will_push.astype(epush.dtype)
         fifo = fifo - pops + pushes
         fifo = fifo.at[E].set(1)  # dummy slot stays at 1
         maxf = jnp.maximum(maxf, fifo)
+
+        # in-fabric bit flip of the stored profile word at the fault cycle
+        profmax = jnp.where(cor_cycle_j == cyc,
+                            jnp.bitwise_xor(profmax, cor_mask_j), profmax)
 
         produced = produced + produce.astype(produced.dtype)
 
@@ -218,34 +412,50 @@ def run_sim(
         src_fire = is_src & produce
         src_t = jnp.where(src_fire, sim.source_ii - 1,
                           jnp.maximum(src_t - 1, 0))
+        fired = jnp.any(consume) | jnp.any(produce)
+        idle = jnp.where(fired, 0, idle + 1)
         return (cyc + 1, fifo, consumed_next, produced, ii_t, drain_t, src_t,
-                maxf, profmax)
+                maxf, profmax, epush, idle)
 
     def cond(state):
-        cyc, fifo, consumed, produced, *_ = state
+        cyc, fifo, consumed, produced = state[:4]
+        idle = state[-1]
         done = jnp.all(produced >= total_out)
-        return (~done) & (cyc < max_cycles)
+        return (~done) & (cyc < max_cycles) & (idle < idle_limit)
 
     z_e = jnp.zeros(E + 1, jnp.int32).at[E].set(1)
     state = (
         jnp.int32(0), z_e, jnp.zeros(N, jnp.int32), jnp.zeros(N, jnp.int32),
         jnp.zeros(N, jnp.int32), extra_lat.astype(jnp.int32),
         jnp.zeros(N, jnp.int32), z_e, jnp.zeros(E + 1, jnp.int32),
+        jnp.zeros(E + 1, jnp.int32), jnp.int32(0),
     )
     state = jax.lax.while_loop(cond, body, state)
-    cyc, fifo, consumed, produced, ii_t, drain_t, src_t, maxf, profmax = state
+    (cyc, fifo, consumed, produced, ii_t, drain_t, src_t, maxf, profmax,
+     epush, idle) = state
 
     completed = bool(jnp.all(produced >= total_out))
     maxf_np = np.asarray(maxf)[:E]
     prof_np = np.asarray(profmax)[:E]
-    node_of = {nid: i for i, nid in enumerate(sim.node_ids)}
-    fifo_max, fifo_prof, ctype = {}, {}, {}
+    fifo_np = np.asarray(fifo)[:E]
+    cons_np = np.asarray(consumed)
+    prod_np = np.asarray(produced)
+    fifo_max, fifo_prof, ctype, ffinal, fcap = {}, {}, {}, {}, {}
     for k, (s, d) in enumerate(sim.edge_list):
         fifo_max[(s, d)] = int(maxf_np[k])
         ctype[(s, d)] = sim.layer_type[d]
+        ffinal[(s, d)] = int(fifo_np[k])
+        fcap[(s, d)] = int(cap_np[k])
         if profiled and sim.profiled[node_of[d]]:
             fifo_prof[(s, d)] = int(prof_np[k])
+    idle_cycles = int(idle)
     return SimResult(
         completed=completed, cycles=int(cyc),
         fifo_max=fifo_max, fifo_profiled=fifo_prof, consumer_type=ctype,
+        deadlocked=(not completed) and idle_cycles >= idle_limit,
+        idle_cycles=idle_cycles,
+        fifo_final=ffinal, fifo_capacity=fcap,
+        node_consumed={n: int(cons_np[i]) for i, n in enumerate(sim.node_ids)},
+        node_produced={n: int(prod_np[i]) for i, n in enumerate(sim.node_ids)},
+        faults=faults,
     )

@@ -1,0 +1,81 @@
+"""Import indirection for ``hypothesis``: real library when installed,
+deterministic mini-fallback otherwise.
+
+The test modules do ``from _hypothesis_shim import given, settings, st``.
+When ``hypothesis`` is available they get the real thing; when it is not
+(the bare container image), a tiny deterministic property runner stands in:
+each ``@given`` test runs a fixed number of examples drawn from a PRNG
+seeded by the test name, so failures reproduce exactly across runs.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import inspect
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 15  # cap: the fallback is a smoke sweep, not a search
+
+    class _Strategy:
+        def __init__(self, gen):
+            self._gen = gen
+
+        def example(self, rnd):
+            return self._gen(rnd)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=None):
+            hi = (2**31 - 1) if max_value is None else max_value
+            return _Strategy(lambda rnd: rnd.randint(min_value, hi))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, allow_nan=False, width=64,
+                   **_kw):
+            return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rnd: rnd.choice(seq))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10, **_kw):
+            def gen(rnd):
+                n = rnd.randint(min_size, max_size)
+                return [elem.example(rnd) for _ in range(n)]
+
+            return _Strategy(gen)
+
+    st = _Strategies()
+
+    def given(*strats):
+        def deco(fn):
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", _FALLBACK_EXAMPLES)
+                rnd = random.Random(zlib.crc32(fn.__name__.encode()))
+                for _ in range(n):
+                    fn(*[s.example(rnd) for s in strats])
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper.__signature__ = inspect.Signature()
+            wrapper._max_examples = _FALLBACK_EXAMPLES
+            return wrapper
+
+        return deco
+
+    def settings(*, max_examples=None, **_kw):
+        def deco(fn):
+            if max_examples is not None and hasattr(fn, "_max_examples"):
+                fn._max_examples = min(max_examples, _FALLBACK_EXAMPLES)
+            return fn
+
+        return deco

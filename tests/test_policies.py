@@ -1,6 +1,6 @@
 """Tests for stream-routing policies (paper §II.A optimizations)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core import DagNode, ProfiledDag, plan_routing
 
