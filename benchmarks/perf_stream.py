@@ -1,0 +1,134 @@
+"""Microbenchmark: compile-once, batch-many simulator runtime (BENCH_7).
+
+Measures, on a 16-plan fault campaign over one RINN:
+
+  * compile-cache behaviour (traces vs launches vs lanes) — a sweep must
+    compile the executable once, not once per run;
+  * sequential throughput through the cached executable (the old serial
+    path, minus its per-call recompilation);
+  * batched throughput via ``run_sim_batch`` (one vmapped device program);
+  * an estimate of the pre-cache cost (first-call compile time), which is
+    what every single run used to pay.
+
+Writes ``BENCH_7.json`` at the repo root to seed the perf trajectory, in
+addition to the ``artifacts/bench/perf_stream.json`` the bench driver
+writes.  Set ``PERF_STREAM_QUICK=1`` for a reduced CI configuration.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+from typing import Dict
+
+from repro.rinn import (
+    FaultPlan, RinnConfig, ZCU102, compile_graph, compile_stats,
+    generate_rinn, reset_compile_stats, run_sim, run_sim_batch,
+)
+
+
+def _campaign(sim, n_plans: int):
+    return [FaultPlan.generate(sim, seed=s, n_stalls=1, n_corruptions=1)
+            for s in range(n_plans)]
+
+
+def run() -> Dict:
+    quick = os.environ.get("PERF_STREAM_QUICK", "") not in ("", "0")
+    n_plans = 8 if quick else 16
+    n_backbone = 5 if quick else 7
+    repeats = 2 if quick else 3
+
+    g = generate_rinn(RinnConfig(
+        family="conv", n_backbone=n_backbone, image_size=8, filters=2,
+        kernel=3, pattern="long_skip", density=0.4, seed=21))
+    sim = compile_graph(g, ZCU102)
+    plans = _campaign(sim, n_plans)
+
+    reset_compile_stats()
+
+    # cold first call = trace + XLA compile + run; that cost used to be
+    # paid by EVERY run because fault plans were trace constants
+    t0 = time.perf_counter()
+    run_sim(sim, profiled=True, faults=plans[0])
+    t_cold_single = time.perf_counter() - t0
+
+    # sequential campaign through the warm cache
+    t_seq = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        seq = [run_sim(sim, profiled=True, faults=p) for p in plans]
+        t_seq.append(time.perf_counter() - t0)
+    t_seq_best = min(t_seq)
+
+    # batched campaign: cold (includes the B-lane compile), then warm
+    t0 = time.perf_counter()
+    bat = run_sim_batch(sim, plans=plans, profiled=True)
+    t_batch_cold = time.perf_counter() - t0
+    t_bat = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        bat = run_sim_batch(sim, plans=plans, profiled=True)
+        t_bat.append(time.perf_counter() - t0)
+    t_batch_best = min(t_bat)
+
+    for a, b in zip(seq, bat):
+        assert a.fifo_max == b.fifo_max and a.cycles == b.cycles, \
+            "batched campaign diverged from sequential"
+
+    stats = compile_stats()
+    total_cycles = sum(r.cycles for r in bat)
+    hit_rate = 1.0 - stats["traces"] / max(1, stats["launches"])
+    speedup = t_seq_best / t_batch_best
+    # what the pre-PR sequential path would have paid: one trace+compile
+    # per run (plans were baked into the trace)
+    t_seq_uncached_est = n_plans * t_cold_single
+    result = {
+        "n_plans": n_plans,
+        "quick": quick,
+        "graph": {"n_backbone": n_backbone, "nodes": len(sim.node_ids),
+                  "edges": len(sim.edge_list)},
+        "compile_cache": {**stats, "hit_rate": round(hit_rate, 4)},
+        "seconds": {
+            "cold_single": t_cold_single,
+            "sequential_cached": t_seq_best,
+            "batched_cold": t_batch_cold,
+            "batched_warm": t_batch_best,
+            "sequential_uncached_estimate": t_seq_uncached_est,
+        },
+        "throughput": {
+            "sims_per_sec_sequential": n_plans / t_seq_best,
+            "sims_per_sec_batched": n_plans / t_batch_best,
+            "sim_cycles_per_sec_batched": total_cycles / t_batch_best,
+            "total_sim_cycles": total_cycles,
+        },
+        "speedup_batched_vs_sequential": speedup,
+        "speedup_batched_vs_uncached_estimate":
+            t_seq_uncached_est / t_batch_best,
+    }
+
+    print("\n== perf_stream: compile-once, batch-many runtime ==")
+    print(f"  campaign: {n_plans} fault plans on {len(sim.node_ids)} nodes / "
+          f"{len(sim.edge_list)} edges")
+    print(f"  compile cache: {stats['traces']} traces over "
+          f"{stats['launches']} launches / {stats['lanes']} lanes "
+          f"(hit rate {hit_rate:.1%})")
+    print(f"  sequential (cached): {t_seq_best*1e3:8.1f} ms  "
+          f"({n_plans/t_seq_best:7.1f} sims/s)")
+    print(f"  batched (warm):      {t_batch_best*1e3:8.1f} ms  "
+          f"({n_plans/t_batch_best:7.1f} sims/s, "
+          f"{total_cycles/t_batch_best:,.0f} sim-cycles/s)")
+    print(f"  speedup: {speedup:.2f}x vs cached-sequential, "
+          f"{t_seq_uncached_est/t_batch_best:.1f}x vs the old "
+          f"recompile-per-run path")
+
+    bench_path = Path(__file__).resolve().parent.parent / "BENCH_7.json"
+    bench_path.write_text(json.dumps(result, indent=1))
+    print(f"  wrote {bench_path}")
+    return result
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, "src")
+    run()

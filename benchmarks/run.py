@@ -10,7 +10,7 @@ import sys
 import time
 from pathlib import Path
 
-BENCHES = ("fig3", "fig4", "table1", "fig5", "roofline")
+BENCHES = ("fig3", "fig4", "table1", "fig5", "roofline", "perf_stream")
 
 
 def main() -> None:
@@ -30,6 +30,8 @@ def main() -> None:
             from benchmarks import fig5_patterns as mod
         elif name == "roofline":
             from benchmarks import roofline as mod
+        elif name == "perf_stream":
+            from benchmarks import perf_stream as mod
         else:
             raise SystemExit(f"unknown benchmark {name!r}; have {BENCHES}")
         res = mod.run()

@@ -8,14 +8,21 @@ from __future__ import annotations
 
 from typing import Dict
 
-from repro.rinn import RinnConfig, ZCU102, compare, generate_rinn
+from repro.rinn import (
+    RinnConfig, ZCU102, compare, compile_stats, generate_rinn,
+    reset_compile_stats,
+)
 
 
 def run() -> Dict:
     g = generate_rinn(RinnConfig(
         family="conv", n_backbone=8, image_size=8, filters=2, kernel=3,
         pattern="density", density=0.35, merge_op="add", seed=42))
-    rep = compare(g, ZCU102)
+    reset_compile_stats()
+    # auto_remediate: an undersized build surfaces its remediation log and a
+    # single shared capacity map instead of aborting the table
+    rep = compare(g, ZCU102, auto_remediate=True)
+    stats = compile_stats()
 
     by_type = {}
     for t, rows in rep.by_layer_type().items():
@@ -28,9 +35,17 @@ def run() -> Dict:
 
     print("\n== Table I: cosim vs profiled FIFO fullness ==")
     print(rep.table())
+    if rep.remediation:
+        print(f"\nremediation: {len(rep.remediation)} attempt(s); shared "
+              f"capacity map of {len(rep.remediated_capacities)} FIFO(s)")
+        for a in rep.remediation:
+            print(f"  attempt {a.attempt}: grew {len(a.overrides)} FIFO(s) "
+                  f"-> {'completed' if a.completed else 'stalled'}")
     print(f"\npaper comparison: mean|diff| {rep.mean_abs_diff:.3f} "
           f"(paper 0.997), max|diff| {rep.max_abs_diff} (paper 6), "
           f"depth range [{rep.min_depth}, {rep.max_depth}] (paper [1, 66])")
+    print(f"runtime: unprofiled+profiled pair ran as one batched program "
+          f"({stats['traces']} trace(s), {stats['launches']} launch(es))")
     return {
         "n_signals": rep.n_signals,
         "mean_abs_diff": rep.mean_abs_diff,
@@ -39,4 +54,7 @@ def run() -> Dict:
         "by_type": by_type,
         "cycles_unprofiled": rep.cycles_unprofiled,
         "cycles_profiled": rep.cycles_profiled,
+        "remediation_attempts": len(rep.remediation),
+        "remediated_fifos": len(rep.remediated_capacities),
+        "compile_stats": stats,
     }

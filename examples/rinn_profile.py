@@ -3,42 +3,76 @@
 Sweeps the §III.C factors on a small RINN family and prints the FIFO-sizing
 guidance table the paper derives (which depths recur, what long skips cost).
 
+Each sweep runs on the batched simulator runtime (``cosim_many`` — one
+vmapped device program per shape bucket), and a stalled configuration
+prints its ``DeadlockReport`` summary instead of killing the sweep.  The
+final section deliberately undersizes the FIFOs to show the FIFOAdvisor
+remediation log.
+
   PYTHONPATH=src python examples/rinn_profile.py
 """
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.rinn import RinnConfig, ZCU102, PYNQ_Z2, compare, cosim_only, generate_rinn
+from repro.rinn import (
+    PYNQ_Z2, RinnConfig, ZCU102, compare, cosim_many, generate_rinn,
+)
+
+
+def sweep(configs, timing=ZCU102):
+    """Run configs batched; print deadlock post-mortems, return survivors."""
+    graphs = [generate_rinn(c) for c in configs]
+    survivors = []
+    for cfg, (res, report) in zip(configs, cosim_many(graphs, timing)):
+        if report is not None:
+            print(f"  [deadlock — skipped] seed={cfg.seed}")
+            for line in report.summary().splitlines():
+                print(f"    {line}")
+            continue
+        survivors.append((cfg, res))
+    return survivors
 
 
 def main():
     print("=== complexity sweep (paper Fig. 5) ===")
-    for n in (3, 5, 7):
-        g = generate_rinn(RinnConfig(n_backbone=n, image_size=8, seed=11,
-                                     pattern="long_skip", density=0.4))
-        res = cosim_only(g, ZCU102)
+    for cfg, res in sweep([
+            RinnConfig(n_backbone=n, image_size=8, seed=11,
+                       pattern="long_skip", density=0.4)
+            for n in (3, 5, 7)]):
         depths = sorted(set(res.fifo_max.values()), reverse=True)[:5]
-        print(f"  n_backbone={n}: recurring depths {depths}")
+        print(f"  n_backbone={cfg.n_backbone}: recurring depths {depths}")
 
     print("=== kernel-size sweep (paper §III.C.5) ===")
-    for k in (2, 3, 5):
-        g = generate_rinn(RinnConfig(n_backbone=5, image_size=8, kernel=k,
-                                     seed=3, pattern="long_skip"))
-        res = cosim_only(g, ZCU102)
-        print(f"  kernel={k}: max fullness {max(res.fifo_max.values())}")
+    for cfg, res in sweep([
+            RinnConfig(n_backbone=5, image_size=8, kernel=k, seed=3,
+                       pattern="long_skip")
+            for k in (2, 3, 5)]):
+        print(f"  kernel={cfg.kernel}: max fullness "
+              f"{max(res.fifo_max.values())}")
 
     print("=== board comparison (paper §III.C.2) ===")
-    g = generate_rinn(RinnConfig(n_backbone=5, image_size=8, seed=4,
-                                 density=0.4))
+    cfg = RinnConfig(n_backbone=5, image_size=8, seed=4, density=0.4)
     for name, board in (("zcu102", ZCU102), ("pynq_z2", PYNQ_Z2)):
-        res = cosim_only(g, board)
-        print(f"  {name}: cycles={res.cycles} "
-              f"max_fifo={max(res.fifo_max.values())}")
+        for _, res in sweep([cfg], board):
+            print(f"  {name}: cycles={res.cycles} "
+                  f"max_fifo={max(res.fifo_max.values())}")
 
     print("=== cosim vs in-band profiled (paper Table I) ===")
+    g = generate_rinn(cfg)
     rep = compare(g, ZCU102)
     print(rep.table())
+
+    print("=== undersized build -> FIFOAdvisor remediation (batched) ===")
+    rep = compare(g, ZCU102.with_(fifo_capacity=4), auto_remediate=True)
+    for a in rep.remediation:
+        grown = ", ".join(f"{'->'.join(e)}:{c}"
+                          for e, c in sorted(a.overrides.items()))
+        print(f"  attempt {a.attempt}: "
+              f"{'completed' if a.completed else 'stalled'}  [{grown}]")
+    print(f"  shared remediated capacities ({len(rep.remediated_capacities)} "
+          f"FIFO(s)) applied to BOTH cosim and profiled runs; "
+          f"mean|diff| {rep.mean_abs_diff:.3f}")
 
 
 if __name__ == "__main__":

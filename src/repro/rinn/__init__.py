@@ -12,11 +12,17 @@ from .build import (
 )
 from .streamsim import (
     BeatFault, CapacityFault, CompiledSim, FaultPlan, NodeStall, SimResult,
-    WordCorruption, compile_graph, run_sim,
+    WordCorruption, compile_graph, critical_path_actors, critical_path_edges,
+    run_sim,
+)
+from .batchsim import (
+    FaultOps, MachineOps, ShapeBucket, compile_stats, machine_bucket,
+    reset_compile_stats, run_sim_batch, run_sim_many,
 )
 from .cosim import (
     BlockedActor, CosimReport, DeadlockError, DeadlockReport, FifoRow,
-    RemediationAttempt, compare, cosim_only, diagnose, run_with_remediation,
+    RemediationAttempt, compare, cosim_many, cosim_only, diagnose,
+    remediate_pair, run_with_remediation,
 )
 
 __all__ = [
@@ -30,7 +36,10 @@ __all__ = [
     "to_profiled_dag", "train_symbolically",
     "CompiledSim", "SimResult", "compile_graph", "run_sim",
     "BeatFault", "CapacityFault", "FaultPlan", "NodeStall", "WordCorruption",
-    "CosimReport", "FifoRow", "compare", "cosim_only",
+    "critical_path_actors", "critical_path_edges",
+    "FaultOps", "MachineOps", "ShapeBucket", "compile_stats",
+    "machine_bucket", "reset_compile_stats", "run_sim_batch", "run_sim_many",
+    "CosimReport", "FifoRow", "compare", "cosim_many", "cosim_only",
     "BlockedActor", "DeadlockError", "DeadlockReport", "RemediationAttempt",
-    "diagnose", "run_with_remediation",
+    "diagnose", "remediate_pair", "run_with_remediation",
 ]

@@ -20,6 +20,7 @@ import numpy as np
 
 from .graphgen import RinnGraph
 from .hls import TimingProfile
+from .batchsim import run_sim_batch, run_sim_many
 from .streamsim import (
     CompiledSim, FaultPlan, SimResult, compile_graph, run_sim,
 )
@@ -168,20 +169,9 @@ class RemediationAttempt:
     report: Optional[DeadlockReport]
 
 
-def run_with_remediation(
-    sim: CompiledSim, *, profiled: bool = False, max_cycles: int = 200_000,
-    faults: Optional[FaultPlan] = None, budget: int = 6, growth: int = 2,
-) -> Tuple[SimResult, List[RemediationAttempt]]:
-    """Run; on a capacity-induced deadlock, grow the full FIFOs and retry.
-
-    Sizing loop: every edge ever observed at capacity is grown geometrically
-    per attempt (``base * growth**attempt``), capped at its worst-case demand
-    bound — the producer's total beat count, which provably removes
-    backpressure on that edge.  Stops early when the deadlock is not
-    capacity-induced (starvation from a dropped beat cannot be sized away)
-    or the budget is spent.  Returns the last result plus the attempt log;
-    never raises.
-    """
+def _remediation_bounds(sim: CompiledSim, faults: Optional[FaultPlan]):
+    """Shared sizing-state for the remediation loops: worst-case capacity
+    bounds, fault-adjusted base capacities, and in-edge sibling groups."""
     node_of = {nid: i for i, nid in enumerate(sim.node_ids)}
     bound = {e: max(2, int(sim.total_out[node_of[e[0]]]))
              for e in sim.edge_list}
@@ -191,11 +181,48 @@ def run_with_remediation(
     in_of: Dict[str, List[Edge]] = {}
     for e in sim.edge_list:
         in_of.setdefault(e[1], []).append(e)
+    return bound, base_cap, in_of
+
+
+def _ladder_overrides(ever_full, bound, base_cap, growth: int,
+                      exponent: int) -> Dict[Edge, int]:
+    """Rung ``exponent`` of the geometric ladder: every edge ever seen full
+    grown to ``base * growth**exponent``, capped at its demand bound —
+    the producer's total beat count, which provably removes backpressure."""
+    return {e: min(bound[e], max(2, base_cap[e]) * growth ** exponent)
+            for e in ever_full}
+
+
+def run_with_remediation(
+    sim: CompiledSim, *, profiled: bool = False, max_cycles: int = 200_000,
+    faults: Optional[FaultPlan] = None, budget: int = 6, growth: int = 2,
+    speculative: bool = True,
+) -> Tuple[SimResult, List[RemediationAttempt]]:
+    """Run; on a capacity-induced deadlock, grow the full FIFOs and retry.
+
+    Sizing loop: every edge ever observed at capacity is grown geometrically
+    per attempt (``base * growth**attempt``), capped at its worst-case demand
+    bound.  Stops early when the deadlock is not capacity-induced
+    (starvation from a dropped beat cannot be sized away) or the budget is
+    spent.  Returns the last result plus the attempt log; never raises.
+
+    ``speculative=True`` (default) runs the *whole remaining capacity
+    ladder* as one vmapped batch per diagnosis instead of one serial run
+    per rung, then walks the rungs in order, re-speculating only when a new
+    deadlock discovers FIFOs the frozen ladder did not grow.  Chosen
+    capacities, results, and the attempt log are identical to the serial
+    loop (``speculative=False``); only the launch count changes.
+    """
+    bound, base_cap, in_of = _remediation_bounds(sim, faults)
 
     ever_full: set = set()
     attempts: List[RemediationAttempt] = []
     res = run_sim(sim, profiled=profiled, max_cycles=max_cycles,
                   faults=faults)
+    # speculative ladder state: rung results precomputed for a frozen
+    # ever_full set; invalidated whenever the set grows
+    spec_frozen: Optional[set] = None
+    spec_rungs: Dict[int, Tuple[Dict[Edge, int], SimResult]] = {}
     for k in range(budget):
         if res.completed:
             break
@@ -209,15 +236,76 @@ def run_with_remediation(
         # one deadlock at a time
         for e in report.full_edges:
             ever_full |= set(in_of[e[1]])
-        overrides = {
-            e: min(bound[e], max(2, base_cap[e]) * growth ** (k + 1))
-            for e in ever_full}
-        res = run_sim(sim, profiled=profiled, max_cycles=max_cycles,
-                      faults=faults, capacity_overrides=overrides)
+        if speculative:
+            if spec_frozen != ever_full:
+                spec_frozen = set(ever_full)
+                exps = list(range(k + 1, budget + 1))
+                over_list = [
+                    _ladder_overrides(spec_frozen, bound, base_cap, growth, x)
+                    for x in exps]
+                rung_res = run_sim_batch(
+                    sim, plans=[faults] * len(exps),
+                    capacity_overrides=over_list, profiled=profiled,
+                    max_cycles=max_cycles)
+                spec_rungs = dict(zip(exps, zip(over_list, rung_res)))
+            overrides, res = spec_rungs[k + 1]
+        else:
+            overrides = _ladder_overrides(ever_full, bound, base_cap,
+                                          growth, k + 1)
+            res = run_sim(sim, profiled=profiled, max_cycles=max_cycles,
+                          faults=faults, capacity_overrides=overrides)
         attempts.append(RemediationAttempt(
             attempt=k, overrides=overrides, completed=res.completed,
             report=None if res.completed else diagnose(sim, res)))
     return res, attempts
+
+
+def remediate_pair(
+    sim: CompiledSim, *, max_cycles: int = 200_000,
+    faults: Optional[FaultPlan] = None, budget: int = 6, growth: int = 2,
+) -> Tuple[SimResult, SimResult, List[RemediationAttempt],
+           Dict[Edge, int]]:
+    """Joint remediation of the unprofiled+profiled cosim pair.
+
+    Both lanes run as one batched device program per rung and share a
+    single capacity map, so Table-I rows always compare the *same*
+    hardware config (remediating each run independently can converge to
+    different FIFO sizes).  Returns ``(ref, prof, attempts, capacities)``.
+    """
+    bound, base_cap, in_of = _remediation_bounds(sim, faults)
+
+    def pair(overrides):
+        ref, prof = run_sim_batch(
+            sim, plans=[faults, faults], profiled=[False, True],
+            capacity_overrides=[overrides, overrides],
+            max_cycles=max_cycles)
+        return ref, prof
+
+    ever_full: set = set()
+    attempts: List[RemediationAttempt] = []
+    overrides: Dict[Edge, int] = {}
+    ref, prof = pair(overrides)
+    for k in range(budget):
+        if ref.completed and prof.completed:
+            break
+        reports = [diagnose(sim, r) for r in (ref, prof) if not r.completed]
+        if not any(rep.capacity_induced for rep in reports):
+            attempts.append(RemediationAttempt(
+                attempt=k, overrides=dict(overrides), completed=False,
+                report=reports[0]))
+            break
+        for rep in reports:
+            for e in rep.full_edges:
+                ever_full |= set(in_of[e[1]])
+        overrides = _ladder_overrides(ever_full, bound, base_cap, growth,
+                                      k + 1)
+        ref, prof = pair(overrides)
+        done = ref.completed and prof.completed
+        attempts.append(RemediationAttempt(
+            attempt=k, overrides=overrides, completed=done,
+            report=None if done else diagnose(
+                sim, ref if not ref.completed else prof)))
+    return ref, prof, attempts, overrides
 
 
 @dataclasses.dataclass
@@ -240,6 +328,9 @@ class CosimReport:
     completed: bool
     remediation: List[RemediationAttempt] = dataclasses.field(
         default_factory=list)
+    # the single capacity map both runs executed under (auto_remediate only)
+    remediated_capacities: Dict[Edge, int] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def n_signals(self) -> int:
@@ -286,19 +377,18 @@ def compare(graph: RinnGraph, timing: TimingProfile,
             remediation_budget: int = 6) -> CosimReport:
     sim = compile_graph(graph, timing)
     attempts: List[RemediationAttempt] = []
+    capacities: Dict[Edge, int] = {}
     if auto_remediate:
-        ref, a1 = run_with_remediation(
-            sim, profiled=False, max_cycles=max_cycles, faults=faults,
+        # joint remediation: one capacity map, both lanes batched per rung —
+        # Table-I rows always compare the same hardware config
+        ref, prof, attempts, capacities = remediate_pair(
+            sim, max_cycles=max_cycles, faults=faults,
             budget=remediation_budget)
-        prof, a2 = run_with_remediation(
-            sim, profiled=True, max_cycles=max_cycles, faults=faults,
-            budget=remediation_budget)
-        attempts = a1 + a2
     else:
-        ref = run_sim(sim, profiled=False, max_cycles=max_cycles,
-                      faults=faults)
-        prof = run_sim(sim, profiled=True, max_cycles=max_cycles,
-                       faults=faults)
+        # the unprofiled+profiled pair is one batched device program
+        ref, prof = run_sim_batch(
+            sim, plans=[faults, faults], profiled=[False, True],
+            max_cycles=max_cycles)
     for res in (ref, prof):
         if not res.completed:
             raise DeadlockError(diagnose(sim, res))
@@ -310,6 +400,7 @@ def compare(graph: RinnGraph, timing: TimingProfile,
     return CosimReport(
         rows=rows, cycles_unprofiled=ref.cycles,
         cycles_profiled=prof.cycles, completed=True, remediation=attempts,
+        remediated_capacities=capacities,
     )
 
 
@@ -329,3 +420,23 @@ def cosim_only(graph: RinnGraph, timing: TimingProfile,
     if not res.completed:
         raise DeadlockError(diagnose(sim, res))
     return res
+
+
+def cosim_many(
+    graphs: List[RinnGraph], timing: TimingProfile, *,
+    max_cycles: int = 200_000,
+    faults: Optional[List[Optional[FaultPlan]]] = None,
+    profiled: bool = False,
+) -> List[Tuple[SimResult, Optional[DeadlockReport]]]:
+    """Vmapped sweep over many designs: graphs that pad into the same shape
+    bucket run as one batched device program (see ``run_sim_many``).
+
+    Never raises on deadlock — each entry is ``(result, report)`` with
+    ``report`` a :class:`DeadlockReport` when that design stalled and
+    ``None`` otherwise, so one bad configuration cannot kill a sweep.
+    """
+    sims = [compile_graph(g, timing) for g in graphs]
+    results = run_sim_many(sims, plans=faults, profiled=profiled,
+                           max_cycles=max_cycles)
+    return [(res, None if res.completed else diagnose(sim, res))
+            for sim, res in zip(sims, results)]

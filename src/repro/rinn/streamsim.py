@@ -34,8 +34,6 @@ import dataclasses
 import random
 from typing import Dict, List, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from .graphgen import RinnGraph
@@ -211,13 +209,27 @@ class FaultPlan:
         n_corruptions: int = 1,
         stall_span: Tuple[int, int] = (5, 40),
         horizon: int = 2000,
+        bias: str = "uniform",
     ) -> "FaultPlan":
-        """Draw a deterministic plan against a compiled machine."""
+        """Draw a deterministic plan against a compiled machine.
+
+        ``bias="uniform"`` (default) draws targets uniformly, exactly as
+        before.  ``bias="critical_path"`` concentrates stalls on the
+        highest total-beat actors and profile-word corruptions on the
+        busiest profiled edges — the places where a real fault hurts the
+        paper's measurements most.
+        """
+        if bias not in ("uniform", "critical_path"):
+            raise ValueError(f"unknown bias {bias!r}; "
+                             "use 'uniform' or 'critical_path'")
         rnd = random.Random(seed)
         actors = [n for n, src in zip(sim.node_ids, sim.is_source) if not src]
         cons = _consumer_index(sim)
         prof_edges = [e for e, ci in zip(sim.edge_list, cons)
                       if sim.profiled[ci]] or list(sim.edge_list)
+        if bias == "critical_path":
+            actors = critical_path_actors(sim)
+            prof_edges = critical_path_edges(sim, prof_edges)
         stalls = tuple(
             NodeStall(node=rnd.choice(actors),
                       start=rnd.randrange(1, horizon),
@@ -242,6 +254,33 @@ class FaultPlan:
 def _consumer_index(sim: "CompiledSim") -> List[int]:
     node_of = {nid: i for i, nid in enumerate(sim.node_ids)}
     return [node_of[d] for (_, d) in sim.edge_list]
+
+
+def critical_path_actors(sim: "CompiledSim",
+                         fraction: float = 0.25) -> List[str]:
+    """Non-source actors in the top ``fraction`` by total beat traffic
+    (consumed + produced) — the machine's critical path, where a stall
+    costs the most schedule slack."""
+    ranked = sorted(
+        (n for n, src in zip(sim.node_ids, sim.is_source) if not src),
+        key=lambda n: -int(sim.total_in[sim.node_ids.index(n)]
+                           + sim.total_out[sim.node_ids.index(n)]))
+    keep = max(1, int(len(ranked) * fraction))
+    return ranked[:keep]
+
+
+def critical_path_edges(sim: "CompiledSim", edges: List[Tuple[str, str]],
+                        fraction: float = 0.25) -> List[Tuple[str, str]]:
+    """The busiest ``fraction`` of ``edges`` by endpoint beat traffic."""
+    node_of = {nid: i for i, nid in enumerate(sim.node_ids)}
+
+    def weight(e):
+        s, d = node_of[e[0]], node_of[e[1]]
+        return int(sim.total_out[s]) + int(sim.total_in[d])
+
+    ranked = sorted(edges, key=lambda e: -weight(e))
+    keep = max(1, int(len(ranked) * fraction))
+    return ranked[:keep]
 
 
 @dataclasses.dataclass
@@ -276,186 +315,14 @@ def run_sim(
     faults).  A no-progress detector stops the loop once no actor has fired
     for longer than any legitimate quiet period, so deadlocks terminate in
     O(deadlock cycle) rather than O(max_cycles).
+
+    Fault plans, capacities, and the ``profiled`` flag are *runtime
+    arguments* of a jit-cached executable keyed on the padded machine shape
+    (see :mod:`repro.rinn.batchsim`): re-running on the same shape bucket
+    with a different plan / override / flag does not recompile.
     """
-    N = len(sim.node_ids)
-    E = len(sim.edge_list)
-    plan = faults or FaultPlan()
-    node_of = {nid: i for i, nid in enumerate(sim.node_ids)}
-    eidx = {e: i for i, e in enumerate(sim.edge_list)}
+    from .batchsim import run_sim_single  # deferred: batchsim imports us
 
-    in_edges = jnp.asarray(sim.in_edges)
-    out_edges = jnp.asarray(sim.out_edges)
-    in_mask = in_edges < E
-    out_mask = out_edges < E
-    total_in = jnp.asarray(sim.total_in)
-    total_out = jnp.asarray(sim.total_out)
-    fill = jnp.asarray(sim.fill)
-    ii = jnp.asarray(sim.ii)
-    extra_lat = jnp.asarray(sim.extra_lat)
-    is_src = jnp.asarray(sim.is_source)
-    prof_node = jnp.asarray(sim.profiled) & profiled
-
-    # per-edge capacity: base, then plan faults, then remediation overrides
-    cap_np = np.full(E + 1, sim.capacity, np.int32)
-    cap_np[E] = np.iinfo(np.int32).max // 2  # dummy slot: infinite space
-    for cf in plan.capacities:
-        cap_np[eidx[cf.edge]] = cf.capacity
-    for e, c in (capacity_overrides or {}).items():
-        cap_np[eidx[e]] = c
-    cap_e = jnp.asarray(cap_np)
-
-    # transient stalls -> [N, S] start/end windows (S >= 1, -1 padded)
-    S = max(1, max((sum(1 for s in plan.stalls if s.node == n)
-                    for n in sim.node_ids), default=1))
-    st_start = np.full((N, S), -1, np.int32)
-    st_end = np.full((N, S), -1, np.int32)
-    slot = {nid: 0 for nid in sim.node_ids}
-    for s in plan.stalls:
-        i, k = node_of[s.node], slot[s.node]
-        st_start[i, k], st_end[i, k] = s.start, s.start + s.duration
-        slot[s.node] = k + 1
-    st_start_j, st_end_j = jnp.asarray(st_start), jnp.asarray(st_end)
-
-    # wire-level beat faults -> per-edge target beat index (-1 = none)
-    drop_beat = np.full(E + 1, -1, np.int32)
-    dup_beat = np.full(E + 1, -1, np.int32)
-    for bf in plan.drops:
-        drop_beat[eidx[bf.edge]] = bf.beat
-    for bf in plan.dups:
-        dup_beat[eidx[bf.edge]] = bf.beat
-    drop_beat_j, dup_beat_j = jnp.asarray(drop_beat), jnp.asarray(dup_beat)
-
-    # profile-word bit flips -> per-edge (cycle, mask), -1 = none
-    cor_cycle = np.full(E + 1, -1, np.int32)
-    cor_mask = np.zeros(E + 1, np.int32)
-    for wc in plan.corruptions:
-        cor_cycle[eidx[wc.edge]] = wc.cycle
-        cor_mask[eidx[wc.edge]] = wc.bitmask
-    cor_cycle_j, cor_mask_j = jnp.asarray(cor_cycle), jnp.asarray(cor_mask)
-
-    # longest legitimate quiet period: ii timers, source cadence, profiling
-    # stalls, drain latency, and any injected stall window
-    idle_limit = int(
-        2 * (int(sim.ii.max(initial=1)) + sim.source_ii + sim.pf_stall)
-        + int(sim.extra_lat.max(initial=0)) + plan.max_stall() + 16)
-
-    def body(state):
-        (cyc, fifo, consumed, produced, ii_t, drain_t, src_t, maxf, profmax,
-         epush, idle) = state
-        stalled = jnp.any((cyc >= st_start_j) & (cyc < st_end_j), axis=1)
-        # fifo has E+1 slots; slot E is the dummy (always 1 item, inf space)
-        in_counts = fifo[in_edges]                       # [N, MAX_IN]
-        in_avail = jnp.all(jnp.where(in_mask, in_counts >= 1, True), axis=1)
-        consume = (in_avail & (ii_t == 0) & (consumed < total_in) & ~is_src
-                   & ~stalled)
-
-        # SPRING sampling: data.size() read immediately before data.read()
-        sampled = jnp.zeros(E + 1, fifo.dtype)
-        read_now = consume & prof_node
-        sampled = sampled.at[in_edges.reshape(-1)].max(
-            jnp.where((in_mask & read_now[:, None]).reshape(-1),
-                      in_counts.reshape(-1), 0))
-        profmax = jnp.maximum(profmax, sampled)
-
-        consumed_next = consumed + consume.astype(consumed.dtype)
-
-        # pipeline allowance — generalized rate model: a node that maps
-        # total_in beats to total_out beats produces at rate out/in after
-        # its fill (1:1 nodes reduce to consumed - fill exactly)
-        done_in = consumed_next >= total_in
-        prog = jnp.maximum(consumed_next - fill, 0)
-        safe_in = jnp.maximum(total_in, 1)
-        rate_allowed = jnp.where(
-            total_out == total_in, prog,
-            (prog * total_out) // safe_in)
-        allowed = jnp.where(done_in, total_out,
-                            jnp.clip(rate_allowed, 0, total_out))
-        allowed = jnp.where(is_src, total_out, allowed)
-
-        out_counts = fifo[out_edges]
-        out_space = jnp.all(
-            jnp.where(out_mask, out_counts < cap_e[out_edges], True), axis=1)
-        src_ready = jnp.where(is_src, src_t == 0, True)
-        drain_ok = drain_t == 0
-        produce = ((produced < allowed) & out_space & src_ready & drain_ok
-                   & (produced < total_out) & ~stalled)
-
-        pops = jnp.zeros(E + 1, fifo.dtype).at[in_edges.reshape(-1)].add(
-            (in_mask & consume[:, None]).reshape(-1).astype(fifo.dtype))
-        pushes = jnp.zeros(E + 1, fifo.dtype).at[out_edges.reshape(-1)].add(
-            (out_mask & produce[:, None]).reshape(-1).astype(fifo.dtype))
-        # wire faults: the producer fired, but the targeted beat never lands
-        # (drop) or lands twice (dup) — invisible to its own bookkeeping
-        will_push = pushes > 0
-        drop_hit = will_push & (epush == drop_beat_j)
-        dup_hit = will_push & (epush == dup_beat_j)
-        pushes = (pushes - drop_hit.astype(fifo.dtype)
-                  + dup_hit.astype(fifo.dtype))
-        epush = epush + will_push.astype(epush.dtype)
-        fifo = fifo - pops + pushes
-        fifo = fifo.at[E].set(1)  # dummy slot stays at 1
-        maxf = jnp.maximum(maxf, fifo)
-
-        # in-fabric bit flip of the stored profile word at the fault cycle
-        profmax = jnp.where(cor_cycle_j == cyc,
-                            jnp.bitwise_xor(profmax, cor_mask_j), profmax)
-
-        produced = produced + produce.astype(produced.dtype)
-
-        # profiling interference (Listing 2): every pf_period-th firing of a
-        # profiled node costs pf_stall extra cycles before the next consume.
-        stall = jnp.where(
-            prof_node & consume & (jnp.mod(consumed_next, sim.pf_period) == 0),
-            sim.pf_stall, 0)
-        ii_t = jnp.where(consume, ii - 1 + stall, jnp.maximum(ii_t - 1, 0))
-        drain_t = jnp.where(done_in & (drain_t > 0), drain_t - 1, drain_t)
-        src_fire = is_src & produce
-        src_t = jnp.where(src_fire, sim.source_ii - 1,
-                          jnp.maximum(src_t - 1, 0))
-        fired = jnp.any(consume) | jnp.any(produce)
-        idle = jnp.where(fired, 0, idle + 1)
-        return (cyc + 1, fifo, consumed_next, produced, ii_t, drain_t, src_t,
-                maxf, profmax, epush, idle)
-
-    def cond(state):
-        cyc, fifo, consumed, produced = state[:4]
-        idle = state[-1]
-        done = jnp.all(produced >= total_out)
-        return (~done) & (cyc < max_cycles) & (idle < idle_limit)
-
-    z_e = jnp.zeros(E + 1, jnp.int32).at[E].set(1)
-    state = (
-        jnp.int32(0), z_e, jnp.zeros(N, jnp.int32), jnp.zeros(N, jnp.int32),
-        jnp.zeros(N, jnp.int32), extra_lat.astype(jnp.int32),
-        jnp.zeros(N, jnp.int32), z_e, jnp.zeros(E + 1, jnp.int32),
-        jnp.zeros(E + 1, jnp.int32), jnp.int32(0),
-    )
-    state = jax.lax.while_loop(cond, body, state)
-    (cyc, fifo, consumed, produced, ii_t, drain_t, src_t, maxf, profmax,
-     epush, idle) = state
-
-    completed = bool(jnp.all(produced >= total_out))
-    maxf_np = np.asarray(maxf)[:E]
-    prof_np = np.asarray(profmax)[:E]
-    fifo_np = np.asarray(fifo)[:E]
-    cons_np = np.asarray(consumed)
-    prod_np = np.asarray(produced)
-    fifo_max, fifo_prof, ctype, ffinal, fcap = {}, {}, {}, {}, {}
-    for k, (s, d) in enumerate(sim.edge_list):
-        fifo_max[(s, d)] = int(maxf_np[k])
-        ctype[(s, d)] = sim.layer_type[d]
-        ffinal[(s, d)] = int(fifo_np[k])
-        fcap[(s, d)] = int(cap_np[k])
-        if profiled and sim.profiled[node_of[d]]:
-            fifo_prof[(s, d)] = int(prof_np[k])
-    idle_cycles = int(idle)
-    return SimResult(
-        completed=completed, cycles=int(cyc),
-        fifo_max=fifo_max, fifo_profiled=fifo_prof, consumer_type=ctype,
-        deadlocked=(not completed) and idle_cycles >= idle_limit,
-        idle_cycles=idle_cycles,
-        fifo_final=ffinal, fifo_capacity=fcap,
-        node_consumed={n: int(cons_np[i]) for i, n in enumerate(sim.node_ids)},
-        node_produced={n: int(prod_np[i]) for i, n in enumerate(sim.node_ids)},
-        faults=faults,
-    )
+    return run_sim_single(sim, profiled=profiled, max_cycles=max_cycles,
+                          faults=faults,
+                          capacity_overrides=capacity_overrides)
