@@ -127,6 +127,23 @@ def run() -> Dict:
     out["bitwidth"] = rows
     claims["bitwidth_no_impact"] = len(set(x["max"] for x in rows)) == 1
 
+    # 9. occupancy timeline of the deepest complexity design -> Perfetto
+    from pathlib import Path
+
+    from repro.rinn import compile_graph
+    from repro.trace import trace_run, validate_chrome_trace, to_perfetto, \
+        write_perfetto
+
+    g = generate_rinn(RinnConfig(n_backbone=7, image_size=8, seed=11,
+                                 pattern="long_skip", density=0.4))
+    _, store = trace_run(compile_graph(g, ZCU102), profiled=True)
+    trace_dir = Path("artifacts/trace")
+    trace_dir.mkdir(parents=True, exist_ok=True)
+    trace_path = trace_dir / "fig5_long_skip.json"
+    write_perfetto(store, trace_path)
+    out["perfetto"] = str(trace_path)
+    claims["perfetto_valid"] = not validate_chrome_trace(to_perfetto(store))
+
     print("\n== Fig5 / §III.C: FIFO-size patterns ==")
     for section, rows in out.items():
         print(f"  {section}: {rows}")

@@ -10,7 +10,8 @@ import sys
 import time
 from pathlib import Path
 
-BENCHES = ("fig3", "fig4", "table1", "fig5", "roofline", "perf_stream")
+BENCHES = ("fig3", "fig4", "table1", "fig5", "roofline", "perf_stream",
+           "trace_smoke")
 
 
 def main() -> None:
@@ -32,6 +33,8 @@ def main() -> None:
             from benchmarks import roofline as mod
         elif name == "perf_stream":
             from benchmarks import perf_stream as mod
+        elif name == "trace_smoke":
+            from benchmarks import trace_smoke as mod
         else:
             raise SystemExit(f"unknown benchmark {name!r}; have {BENCHES}")
         res = mod.run()

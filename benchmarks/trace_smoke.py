@@ -1,0 +1,95 @@
+"""Trace-smoke — the observability loop end to end, as a CI gate.
+
+One undersized-FIFO campaign exercises the whole ``repro.trace`` path:
+
+  1. trace a deadlocking capacity-fault run (windowed occupancy timelines),
+  2. attribute bottlenecks (the faulted FIFO must rank first as root cause,
+     consistent with the simulator's own deadlock diagnosis),
+  3. turn the trace into a sizing recommendation and feed it back into
+     ``run_with_remediation`` — the seeded run must complete with ZERO
+     geometric-ladder attempts,
+  4. export Perfetto/Chrome-trace JSON to ``artifacts/trace/`` and check it
+     against the Chrome trace-event schema,
+  5. re-ingest the exported file and verify losslessness,
+  6. diff the faulted trace against the healthy baseline.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Dict
+
+from repro.rinn import RinnConfig, ZCU102, compile_graph, generate_rinn
+from repro.rinn.cosim import diagnose, run_with_remediation
+from repro.rinn.streamsim import CapacityFault, FaultPlan
+from repro.trace import (
+    attribute_bottlenecks, diff_traces, read_perfetto, recommend_capacities,
+    text_report, to_perfetto, trace_run, validate_chrome_trace,
+    write_perfetto,
+)
+
+FAULT_EDGE = ("clone_conv1", "merge3")
+
+
+def run() -> Dict:
+    cfg = RinnConfig(n_backbone=5, image_size=8, seed=4, density=0.4)
+    sim = compile_graph(generate_rinn(cfg), ZCU102)
+    plan = FaultPlan(seed=1, capacities=(
+        CapacityFault(edge=FAULT_EDGE, capacity=2),))
+
+    # 1. healthy baseline + faulted campaign, both traced
+    res_ok, trace_ok = trace_run(sim, profiled=True, max_cycles=50_000)
+    res_bad, trace_bad = trace_run(sim, profiled=True, faults=plan,
+                                   max_cycles=50_000)
+    assert res_ok.completed and not res_bad.completed
+
+    # 2. attribution: faulted edge first, as root cause, deadlock-consistent
+    report = attribute_bottlenecks(trace_bad,
+                                   deadlock=diagnose(sim, res_bad))
+    top = report.ranked[0]
+    fault_name = "->".join(FAULT_EDGE)
+    assert top.name == fault_name and top.role == "root_cause", top
+    assert report.deadlock_consistent, report.deadlock_missing
+    print(report.summary())
+
+    # 3. sizing closes the loop: seeded remediation, no ladder
+    cap_map = recommend_capacities(trace_bad, sim).capacity_map()
+    assert FAULT_EDGE in cap_map, cap_map
+    res_fix, attempts = run_with_remediation(
+        sim, profiled=True, max_cycles=50_000, faults=plan,
+        initial_overrides=cap_map)
+    assert res_fix.completed and attempts == [], (res_fix.completed, attempts)
+    _, ladder = run_with_remediation(sim, profiled=True, max_cycles=50_000,
+                                     faults=plan)
+
+    # 4. Perfetto export validates against the Chrome-trace schema
+    out_dir = Path("artifacts/trace")
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / "trace_smoke.json"
+    write_perfetto(trace_bad, path)
+    errors = validate_chrome_trace(to_perfetto(trace_bad))
+    assert not errors, errors
+
+    # 5. lossless round trip
+    assert read_perfetto(path).equals(trace_bad)
+
+    # 6. run-to-run diff flags the regression
+    diff = diff_traces(trace_ok, trace_bad)
+    regressed = {d.name for d in diff.regressions()}
+    assert fault_name in regressed, regressed
+    print(diff.summary())
+    print(text_report(trace_bad, top=5))
+
+    return {
+        "top_bottleneck": top.name,
+        "top_role": top.role,
+        "deadlock_consistent": report.deadlock_consistent,
+        "capacity_map": {"->".join(e): c for e, c in cap_map.items()},
+        "seeded_attempts": len(attempts),
+        "ladder_attempts": len(ladder),
+        "perfetto": str(path),
+        "perfetto_errors": errors,
+        "roundtrip_lossless": True,
+        "regressions": sorted(regressed),
+        "windows": trace_bad.n_windows,
+        "channels": trace_bad.n_channels,
+    }

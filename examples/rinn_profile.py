@@ -74,6 +74,27 @@ def main():
           f"FIFO(s)) applied to BOTH cosim and profiled runs; "
           f"mean|diff| {rep.mean_abs_diff:.3f}")
 
+    print("=== occupancy timeline -> bottlenecks -> Perfetto ===")
+    from pathlib import Path
+
+    from repro.rinn import compile_graph
+    from repro.trace import (
+        attribute_bottlenecks, recommend_capacities, text_report, trace_run,
+        write_perfetto,
+    )
+
+    sim = compile_graph(g, ZCU102)
+    _, store = trace_run(sim, profiled=True)
+    print(text_report(store, top=5))
+    print(attribute_bottlenecks(store).summary(5))
+    plan = recommend_capacities(store, sim)
+    print(plan.summary())
+    out = Path("artifacts/trace")
+    out.mkdir(parents=True, exist_ok=True)
+    write_perfetto(store, out / "rinn_profile.json")
+    print(f"  perfetto trace -> {out / 'rinn_profile.json'} "
+          f"(open in ui.perfetto.dev)")
+
 
 if __name__ == "__main__":
     main()

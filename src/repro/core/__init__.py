@@ -6,20 +6,24 @@ statically predetermined label schema — implemented as a composable JAX
 module (see DESIGN.md §2 for the FPGA→TPU mapping).
 """
 from .stream import (
-    INTEGRITY_METRIC, IntegrityReport, Label, PLACEHOLDER, ProfileStream,
-    placeholder_label, validate_policy,
+    GUARD_ALGOS, INTEGRITY_METRIC, IntegrityReport, Label, PLACEHOLDER,
+    ProfileStream, placeholder_label, validate_policy,
 )
 from .tape import TapeSpec, concat_streams_and_rows, rows_to_stream
-from .codec import FLOAT_FORMATS, FixedPointCodec, verify_checksum, word_checksum
+from .codec import (
+    FLOAT_FORMATS, FixedPointCodec, verify_checksum, verify_crc32,
+    word_checksum, word_crc32,
+)
 from .collector import ProfileCollector, SignalAggregate
 from .policies import DagNode, ProfiledDag, RoutingPlan, plan_routing
 from . import metrics
 
 __all__ = [
     "Label", "PLACEHOLDER", "ProfileStream", "placeholder_label", "validate_policy",
-    "INTEGRITY_METRIC", "IntegrityReport",
+    "GUARD_ALGOS", "INTEGRITY_METRIC", "IntegrityReport",
     "TapeSpec", "concat_streams_and_rows", "rows_to_stream",
-    "FLOAT_FORMATS", "FixedPointCodec", "verify_checksum", "word_checksum",
+    "FLOAT_FORMATS", "FixedPointCodec", "verify_checksum", "verify_crc32",
+    "word_checksum", "word_crc32",
     "ProfileCollector", "SignalAggregate",
     "DagNode", "ProfiledDag", "RoutingPlan", "plan_routing",
     "metrics",

@@ -35,6 +35,30 @@ class ProfileCollector:
         self.integrity_failures = 0
         self.quarantine_counts: Dict[str, int] = {}
         self._last_integrity: Optional[IntegrityReport] = None
+        self._trace = None
+        self._trace_caps: Dict[str, int] = {}
+
+    def attach_trace(self, store=None, *,
+                     capacities: Optional[Dict[str, int]] = None):
+        """Tap the ingest path into a :class:`repro.trace.TraceStore`.
+
+        Every subsequent ingest folds the decoded signals into the store as
+        one window per step (keeping the time axis the aggregates discard).
+        Pass an existing store to share it, or let the tap create one;
+        ``capacities`` maps signal names to FIFO depths so time-at-full is
+        attributable downstream.  Returns the attached store.
+        """
+        if store is None:
+            from repro.trace.store import TraceStore
+            store = TraceStore(window_cycles=1, time_unit="steps")
+        self._trace = store
+        self._trace_caps = dict(capacities or {})
+        return store
+
+    @property
+    def trace(self):
+        """The attached :class:`repro.trace.TraceStore`, or ``None``."""
+        return self._trace
 
     def ingest(self, stream: ProfileStream) -> Dict[str, np.ndarray]:
         decoded = stream.decode()
@@ -65,6 +89,8 @@ class ProfileCollector:
 
     def ingest_decoded(self, decoded: Dict[str, np.ndarray]) -> None:
         self.steps += 1
+        if self._trace is not None and decoded:
+            self._trace.record_step(decoded, capacities=self._trace_caps)
         for name, vals in decoded.items():
             vals = np.asarray(vals, dtype=np.float64)
             agg = self._agg.get(name)

@@ -43,7 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .codec import word_checksum
+from .codec import word_checksum, word_crc32
 
 # Placeholder word written into the fresh stream of a non-primary split
 # branch (paper: "the second output stream is initialized with a placeholder
@@ -56,6 +56,13 @@ INTEGRITY_METRIC = "integrity"
 
 _VALID_POLICIES = ("off", "inline", "shortcut")
 _NON_SIGNAL_METRICS = ("placeholder", INTEGRITY_METRIC)
+
+# Guard-word algorithms for ``append_guarded``.  ``xor24`` (default) emits a
+# [seq, fold] pair; ``crc32`` emits [seq, lo16, hi16] — a full CRC-32 split
+# into two sub-2**16 halves so it stays exact through a float32 stream.  The
+# decoder tells them apart by the guard label's size, so streams built with
+# either (or both) algorithms decode without any mode flag.
+GUARD_ALGOS = ("xor24", "crc32")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,22 +169,33 @@ class ProfileStream:
             jnp.concatenate([self.data, values]), self.schema + (label,)
         )
 
-    def append_guarded(self, name: str, metric: str, values) -> "ProfileStream":
-        """``append`` plus a [sequence, checksum] guard word pair.
+    def append_guarded(self, name: str, metric: str, values, *,
+                       algo: str = "xor24") -> "ProfileStream":
+        """``append`` plus a [sequence, checksum...] guard word group.
 
         The sequence number counts guarded records already in the stream, so
         the host detects dropped/duplicated/reordered module records; the
         checksum covers the payload words, so it detects in-band bit flips.
-        The guard rides the stream as two ordinary profile words — the exact
+        The guard rides the stream as ordinary profile words — the exact
         in-band discipline the data words use (nothing out-of-band exists on
         the fabric).
+
+        ``algo`` selects the checksum: ``"xor24"`` (default, one fold word)
+        or ``"crc32"`` (two words, full CRC-32 — detects burst errors the
+        fold can miss).  The guard label's size encodes the choice, so mixed
+        streams decode without any side channel.
         """
+        if algo not in GUARD_ALGOS:
+            raise ValueError(f"algo must be one of {GUARD_ALGOS}, got {algo!r}")
         out = self.append(name, metric, values)
         payload = out.data[self.n_words:]
         seq = jnp.full((1,), float(self._next_seq()), dtype=self.dtype)
-        check = word_checksum(payload).astype(self.dtype)[None]
+        if algo == "crc32":
+            check = word_crc32(payload).astype(self.dtype)
+        else:
+            check = word_checksum(payload).astype(self.dtype)[None]
         guard = Label(name=f"{name}/__guard__", metric=INTEGRITY_METRIC,
-                      size=2)
+                      size=1 + int(check.shape[0]))
         return ProfileStream(
             jnp.concatenate([out.data, seq, check]), out.schema + (guard,)
         )
@@ -309,9 +327,17 @@ class ProfileStream:
                     continue
                 name, payload = pending
                 pending = None
-                expect = float(np.asarray(jax.device_get(
-                    word_checksum(payload).astype(self.dtype))))
-                commit(name, payload, ok=(float(words[1]) == expect))
+                if label.size >= 3:  # crc32 guard: [seq, lo16, hi16]
+                    expect = np.asarray(jax.device_get(
+                        word_crc32(payload).astype(self.dtype)),
+                        dtype=np.float64)
+                    ok = (float(words[1]) == float(expect[0])
+                          and float(words[2]) == float(expect[1]))
+                else:                # xor24 guard: [seq, fold]
+                    expect = float(np.asarray(jax.device_get(
+                        word_checksum(payload).astype(self.dtype))))
+                    ok = float(words[1]) == expect
+                commit(name, payload, ok=ok)
                 seq = float(words[0])
                 if np.isfinite(seq) and 0 <= seq < 2**31:
                     seen_seq.append(int(seq))

@@ -169,6 +169,7 @@ class ProfilingSupervisor:
         self.overhead_budget = overhead_budget
         self.events: List[DegradationEvent] = []
         self._streak = 0
+        self._hb_streak = 0
         self._step = 0
 
     @property
@@ -194,23 +195,50 @@ class ProfilingSupervisor:
             f"profiling overhead {overhead_frac:.2f} > "
             f"budget {self.overhead_budget:.2f}", counted=True)
 
+    def observe_heartbeats(self, heartbeats: "Heartbeats") -> str:
+        """Fold straggler reports into the degradation ladder.
+
+        A straggling host starves the profile-stream drain the same way an
+        overhead breach does, so persistent stragglers step profiling down a
+        rung.  Straggler strikes accumulate on their *own* streak — healthy
+        heartbeats clear it, healthy ingests (``step_ok``) do not — so a
+        slow-host signal interleaved with clean decodes still reaches the
+        threshold.
+        """
+        reports = heartbeats.stragglers()
+        if not reports:
+            self._hb_streak = 0
+            return self.policy
+        self._hb_streak += 1
+        if self._hb_streak >= self.failure_threshold and self.active:
+            worst = max(reports, key=lambda r: r.slowdown)
+            self._step_down(
+                f"straggler host {worst.host}: latency {worst.latency:.3f}s "
+                f"= {worst.slowdown:.1f}x median")
+            self._hb_streak = 0
+        return self.policy
+
     def _strike(self, reason: str, counted: bool = False) -> str:
         if not counted:
             self._step += 1
         self._streak += 1
         if self._streak >= self.failure_threshold and self.active:
-            i = PROFILING_LADDER.index(self.policy)
-            nxt = PROFILING_LADDER[min(i + 1, len(PROFILING_LADDER) - 1)]
-            self.events.append(DegradationEvent(
-                step=self._step, from_policy=self.policy, to_policy=nxt,
-                reason=reason))
-            self.policy = nxt
+            self._step_down(reason)
             self._streak = 0
         return self.policy
+
+    def _step_down(self, reason: str) -> None:
+        i = PROFILING_LADDER.index(self.policy)
+        nxt = PROFILING_LADDER[min(i + 1, len(PROFILING_LADDER) - 1)]
+        self.events.append(DegradationEvent(
+            step=self._step, from_policy=self.policy, to_policy=nxt,
+            reason=reason))
+        self.policy = nxt
 
     def reset(self, policy: str = "inline") -> None:
         self.policy = policy
         self._streak = 0
+        self._hb_streak = 0
 
     def summary(self) -> str:
         if not self.events:

@@ -65,7 +65,7 @@ def run_serve(
     prompt_len: int = 16, gen: int = 16, seed: int = 0,
     profile_policy: str = "inline", failure_threshold: int = 2,
     overhead_budget: float = 0.25, step_budget_s: float = 5.0,
-    corrupt_every: int = 0,
+    corrupt_every: int = 0, trace: bool = False,
 ) -> ServeResult:
     """Decode ``gen`` tokens per sequence under profiling supervision.
 
@@ -91,6 +91,10 @@ def run_serve(
     serve_step = jax.jit(make_serve_step(cfg), donate_argnums=(1,),
                          static_argnums=())
     collector = ProfileCollector()
+    if trace:
+        # kv/occupancy words are [used_positions, cache_len]: the cache is
+        # full when the used count reaches max_len
+        collector.attach_trace(capacities={"kv/occupancy": max_len})
     supervisor = ProfilingSupervisor(
         policy=profile_policy, failure_threshold=failure_threshold,
         overhead_budget=overhead_budget)
@@ -129,6 +133,13 @@ def run_serve(
             supervisor.step_ok()
     dt = time.time() - t0
 
+    if trace and collector.trace is not None:
+        for ev in supervisor.events:
+            collector.trace.add_marker(
+                f"profiling: {ev.from_policy}->{ev.to_policy}",
+                detail=ev.reason,
+                window=min(ev.step, max(collector.trace.n_windows - 1, 0)))
+
     out = jnp.concatenate(generated, axis=1)
     return ServeResult(
         tokens=out, collector=collector, supervisor=supervisor,
@@ -148,17 +159,24 @@ def main(argv=None):
     ap.add_argument("--corrupt-every", type=int, default=0,
                     help="fault injection: flip a bit in every N-th step's "
                          "profile stream")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the decode-loop occupancy timeline here as "
+                         "Perfetto/Chrome-trace JSON")
     args = ap.parse_args(argv)
 
     res = run_serve(
         args.arch, reduced=args.reduced, batch=args.batch,
         prompt_len=args.prompt_len, gen=args.gen, seed=args.seed,
         profile_policy=args.profile_policy,
-        corrupt_every=args.corrupt_every)
+        corrupt_every=args.corrupt_every, trace=bool(args.trace_out))
     out = res.tokens
     print(f"decoded {out.shape} ({res.toks_per_s:.1f} tok/s host)")
     print(res.supervisor.summary())
     print(res.collector.report())
+    if args.trace_out and res.collector.trace is not None:
+        from repro.trace import write_perfetto
+        write_perfetto(res.collector.trace, args.trace_out)
+        print(f"perfetto trace -> {args.trace_out}")
     return out
 
 

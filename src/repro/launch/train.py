@@ -59,6 +59,9 @@ def main(argv=None):
                     choices=("inline", "shortcut", "off"), default="inline")
     ap.add_argument("--step-budget-s", type=float, default=30.0,
                     help="watchdog wall-clock budget per train step")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the per-step profile timeline here as "
+                         "Perfetto/Chrome-trace JSON")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -93,6 +96,8 @@ def main(argv=None):
     dcfg = DataConfig(seed=args.seed + 1, global_batch=args.batch,
                       seq_len=args.seq, vocab_size=cfg.vocab_size)
     collector = ProfileCollector()
+    if args.trace_out:
+        collector.attach_trace()
     spec = tape_spec(cfg)
     hb = Heartbeats(n_hosts=1)
     guard = PreemptionGuard()
@@ -134,6 +139,9 @@ def main(argv=None):
     def on_metrics(s, m):
         loss = float(m["loss"])
         losses.append(loss)
+        # persistent stragglers starve the profile drain: fold them into
+        # the same degradation ladder as integrity/overhead strikes
+        supervisor.observe_heartbeats(hb)
         if s % 10 == 0 or s == loop.start_step:
             strag = hb.stragglers()
             print(f"step {s:5d} loss {loss:8.4f} "
@@ -161,6 +169,16 @@ def main(argv=None):
     if args.profile_report:
         Path(args.profile_report).write_text(collector.report())
         print(f"profile report -> {args.profile_report}")
+    if args.trace_out and collector.trace is not None:
+        from repro.trace import write_perfetto
+        store = collector.trace
+        for ev in supervisor.events:
+            store.add_marker(
+                f"profiling: {ev.from_policy}->{ev.to_policy}",
+                detail=ev.reason,
+                window=min(ev.step, max(store.n_windows - 1, 0)))
+        write_perfetto(store, args.trace_out)
+        print(f"perfetto trace -> {args.trace_out}")
     return losses
 
 

@@ -16,8 +16,9 @@ from .streamsim import (
     run_sim,
 )
 from .batchsim import (
-    FaultOps, MachineOps, ShapeBucket, compile_stats, machine_bucket,
-    reset_compile_stats, run_sim_batch, run_sim_many,
+    FaultOps, MachineOps, ShapeBucket, TraceBuffers, compile_stats,
+    machine_bucket, reset_compile_stats, run_sim_batch, run_sim_many,
+    run_sim_traced, run_sim_traced_batch,
 )
 from .cosim import (
     BlockedActor, CosimReport, DeadlockError, DeadlockReport, FifoRow,
@@ -37,8 +38,9 @@ __all__ = [
     "CompiledSim", "SimResult", "compile_graph", "run_sim",
     "BeatFault", "CapacityFault", "FaultPlan", "NodeStall", "WordCorruption",
     "critical_path_actors", "critical_path_edges",
-    "FaultOps", "MachineOps", "ShapeBucket", "compile_stats",
+    "FaultOps", "MachineOps", "ShapeBucket", "TraceBuffers", "compile_stats",
     "machine_bucket", "reset_compile_stats", "run_sim_batch", "run_sim_many",
+    "run_sim_traced", "run_sim_traced_batch",
     "CosimReport", "FifoRow", "compare", "cosim_many", "cosim_only",
     "BlockedActor", "DeadlockError", "DeadlockReport", "RemediationAttempt",
     "diagnose", "remediate_pair", "run_with_remediation",

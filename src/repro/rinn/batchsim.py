@@ -39,6 +39,8 @@ lanes freeze), so batched results are bit-identical to sequential runs.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import math
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
@@ -245,7 +247,16 @@ def reset_compile_stats() -> None:
         _STATS[k] = 0
 
 
-def _simulate(m: MachineOps, f: FaultOps):
+def _simulate(m: MachineOps, f: FaultOps, trace=None):
+    """Step the machine to completion.
+
+    ``trace=None`` is the plain path (unchanged).  ``trace=(stride,
+    t_slots)`` additionally folds per-cycle FIFO state into ``t_slots``
+    windowed accumulators of ``stride`` cycles each — within-window max
+    and sum of occupancy, plus cycles-at-capacity / cycles-empty counts —
+    the raw material of :mod:`repro.trace`.  ``t_slots`` is static (part
+    of the jit cache key); ``stride`` is a runtime scalar.
+    """
     _STATS["traces"] += 1  # python body runs only while tracing
     n_pad = m.total_in.shape[0]
     e_slots = f.cap.shape[0]  # E_pad + 1; last slot is the dummy edge
@@ -253,10 +264,12 @@ def _simulate(m: MachineOps, f: FaultOps):
     in_mask = m.in_edges < dummy
     out_mask = m.out_edges < dummy
     prof_node = m.prof & f.profiled
+    if trace is not None:
+        stride, t_slots = trace
 
     def body(state):
         (cyc, fifo, consumed, produced, ii_t, drain_t, src_t, maxf, profmax,
-         epush, idle) = state
+         epush, idle) = state[:11]
         stalled = jnp.any((cyc >= f.st_start) & (cyc < f.st_end), axis=1)
         in_counts = fifo[m.in_edges]                     # [N, MAX_IN]
         in_avail = jnp.all(jnp.where(in_mask, in_counts >= 1, True), axis=1)
@@ -331,12 +344,24 @@ def _simulate(m: MachineOps, f: FaultOps):
                           jnp.maximum(src_t - 1, 0))
         fired = jnp.any(consume) | jnp.any(produce)
         idle = jnp.where(fired, 0, idle + 1)
-        return (cyc + 1, fifo, consumed_next, produced, ii_t, drain_t, src_t,
-                maxf, profmax, epush, idle)
+        nxt = (cyc + 1, fifo, consumed_next, produced, ii_t, drain_t, src_t,
+               maxf, profmax, epush, idle)
+        if trace is None:
+            return nxt
+        # windowed trace accumulators (end-of-cycle FIFO state)
+        tr_max, tr_sum, tr_full, tr_empty, tr_cyc = state[11:]
+        w = jnp.minimum(cyc // stride, t_slots - 1)
+        at_cap = (fifo >= f.cap).astype(jnp.int32)
+        tr_max = tr_max.at[w].max(fifo)
+        tr_sum = tr_sum.at[w].add(fifo)
+        tr_full = tr_full.at[w].add(at_cap)
+        tr_empty = tr_empty.at[w].add((fifo == 0).astype(jnp.int32))
+        tr_cyc = tr_cyc.at[w].add(1)
+        return nxt + (tr_max, tr_sum, tr_full, tr_empty, tr_cyc)
 
     def cond(state):
         cyc, _fifo, _consumed, produced = state[:4]
-        idle = state[-1]
+        idle = state[10]
         done = jnp.all(produced >= m.total_out)
         return (~done) & (cyc < f.max_cycles) & (idle < f.idle_limit)
 
@@ -347,15 +372,39 @@ def _simulate(m: MachineOps, f: FaultOps):
         z_n, z_e, jnp.zeros(e_slots, jnp.int32),
         jnp.zeros(e_slots, jnp.int32), jnp.int32(0),
     )
+    if trace is not None:
+        z_te = jnp.zeros((t_slots, e_slots), jnp.int32)
+        state = state + (z_te, z_te, z_te, z_te,
+                         jnp.zeros(t_slots, jnp.int32))
     state = jax.lax.while_loop(cond, body, state)
     (cyc, fifo, consumed, produced, _ii_t, _drain_t, _src_t, maxf, profmax,
-     _epush, idle) = state
-    return cyc, fifo, consumed, produced, maxf, profmax, idle
+     _epush, idle) = state[:11]
+    outs = (cyc, fifo, consumed, produced, maxf, profmax, idle)
+    if trace is not None:
+        outs = outs + tuple(state[11:])
+    return outs
 
 
 _jit_single = jax.jit(_simulate)
 _jit_lanes = jax.jit(jax.vmap(_simulate, in_axes=(None, 0)))
 _jit_machines = jax.jit(jax.vmap(_simulate, in_axes=(0, 0)))
+
+
+@functools.lru_cache(maxsize=None)
+def _traced_jits(t_slots: int):
+    """Jitted traced entry points for one (static) window count.
+
+    ``t_slots`` sizes the windowed accumulators and is therefore part of
+    the jit cache key; the window stride stays a runtime scalar, so
+    re-running with a different stride (or machine in the same shape
+    bucket) does not recompile.
+    """
+
+    def single(m, f, stride):
+        return _simulate(m, f, trace=(stride, t_slots))
+
+    return (jax.jit(single),
+            jax.jit(jax.vmap(single, in_axes=(None, 0, None))))
 
 
 # --------------------------------------------------------------------- #
@@ -463,6 +512,121 @@ def run_sim_batch(
                 [o[b] for o in outs])
         for b in range(n)
     ]
+
+
+class TraceBuffers(NamedTuple):
+    """Raw windowed trace of one run — the feed for :mod:`repro.trace`.
+
+    Arrays are trimmed to the windows the run actually touched and to the
+    machine's real edges (padding removed); column ``k`` corresponds to
+    ``edge_list[k]`` of the machine that produced it.
+    """
+
+    stride: int              # cycles per window
+    occ_max: np.ndarray      # [W, E] within-window max occupancy
+    occ_sum: np.ndarray      # [W, E] sum of end-of-cycle occupancies
+    full_cycles: np.ndarray  # [W, E] cycles spent at capacity
+    empty_cycles: np.ndarray # [W, E] cycles spent empty
+    window_cycles: np.ndarray# [W] cycles folded into each window
+
+
+def _trim_trace(sim: CompiledSim, stride: int, cycles: int,
+                tr_outs) -> TraceBuffers:
+    tr_max, tr_sum, tr_full, tr_empty, tr_cyc = [np.asarray(o)
+                                                 for o in tr_outs]
+    E = len(sim.edge_list)
+    w_used = max(1, min(tr_cyc.shape[0],
+                        -(-max(cycles, 1) // stride)))  # ceil
+    return TraceBuffers(
+        stride=stride,
+        occ_max=tr_max[:w_used, :E], occ_sum=tr_sum[:w_used, :E],
+        full_cycles=tr_full[:w_used, :E], empty_cycles=tr_empty[:w_used, :E],
+        window_cycles=tr_cyc[:w_used])
+
+
+def _trace_stride(stride: Optional[int], max_cycles: int, windows: int) -> int:
+    if stride is not None:
+        if stride < 1:
+            raise ValueError("stride must be >= 1")
+        return int(stride)
+    return max(1, math.ceil(max_cycles / windows))
+
+
+def run_sim_traced(
+    sim: CompiledSim, *, profiled: bool = False, max_cycles: int = 200_000,
+    faults: Optional[FaultPlan] = None,
+    capacity_overrides: Optional[Dict[Edge, int]] = None,
+    windows: int = 256, stride: Optional[int] = None,
+) -> Tuple[SimResult, TraceBuffers]:
+    """One run with windowed occupancy capture.
+
+    The result is bit-identical to :func:`run_sim_single`; the extra
+    :class:`TraceBuffers` holds per-window per-edge occupancy max/sum and
+    full/empty cycle counts.  ``windows`` is static (one executable per
+    distinct value — keep it at the default unless you need finer time
+    resolution); ``stride`` defaults to ``ceil(max_cycles / windows)``.
+    """
+    plan = faults or FaultPlan()
+    bucket = machine_bucket(sim, _stall_slots(plan))
+    machine = _to_device(pack_machine(sim, bucket))
+    ops, cap_np, idle_limit = pack_faults(
+        sim, bucket, plan, capacity_overrides, profiled, max_cycles)
+    stride = _trace_stride(stride, max_cycles, windows)
+    jit_one, _ = _traced_jits(windows)
+    _STATS["launches"] += 1
+    _STATS["lanes"] += 1
+    outs = [np.asarray(o) for o in
+            jit_one(machine, _to_device(ops), jnp.int32(stride))]
+    res = _unpack(sim, cap_np, faults, profiled, idle_limit, outs[:7])
+    return res, _trim_trace(sim, stride, res.cycles, outs[7:])
+
+
+def run_sim_traced_batch(
+    sim: CompiledSim, *,
+    plans: Union[None, FaultPlan, Sequence[Optional[FaultPlan]]] = None,
+    capacity_overrides: Union[
+        None, Dict[Edge, int], Sequence[Optional[Dict[Edge, int]]]] = None,
+    profiled: Union[bool, Sequence[bool]] = False,
+    max_cycles: int = 200_000, n: Optional[int] = None,
+    windows: int = 256, stride: Optional[int] = None,
+) -> List[Tuple[SimResult, TraceBuffers]]:
+    """B traced lanes of one machine in a single vmapped device program.
+
+    Same broadcasting rules as :func:`run_sim_batch`; all lanes share one
+    ``max_cycles`` / stride so their window axes line up (lane-to-lane
+    diffing needs a common time base).
+    """
+    lengths = [len(v) for v in (plans, capacity_overrides, profiled)
+               if isinstance(v, (list, tuple))]
+    if n is None:
+        n = max(lengths) if lengths else 1
+    plans_l = _broadcast(plans, n, "plans")
+    caps_l = _broadcast(capacity_overrides, n, "capacity_overrides")
+    prof_l = _broadcast(profiled, n, "profiled")
+    stride = _trace_stride(stride, max_cycles, windows)
+    if n == 1:
+        return [run_sim_traced(
+            sim, profiled=prof_l[0], max_cycles=max_cycles,
+            faults=plans_l[0], capacity_overrides=caps_l[0],
+            windows=windows, stride=stride)]
+
+    stall_slots = max(_stall_slots(p or FaultPlan()) for p in plans_l)
+    bucket = machine_bucket(sim, stall_slots)
+    machine = _to_device(pack_machine(sim, bucket))
+    packed = [pack_faults(sim, bucket, p or FaultPlan(), c, pr, max_cycles)
+              for p, c, pr in zip(plans_l, caps_l, prof_l)]
+    stacked = _stack([ops for ops, _, _ in packed])
+    _, jit_b = _traced_jits(windows)
+    _STATS["launches"] += 1
+    _STATS["lanes"] += n
+    outs = [np.asarray(o) for o in jit_b(machine, stacked, jnp.int32(stride))]
+    results = []
+    for b in range(n):
+        res = _unpack(sim, packed[b][1], plans_l[b], prof_l[b], packed[b][2],
+                      [o[b] for o in outs[:7]])
+        results.append((res, _trim_trace(sim, stride, res.cycles,
+                                         [o[b] for o in outs[7:]])))
+    return results
 
 
 def run_sim_many(

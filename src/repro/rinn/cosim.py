@@ -197,6 +197,7 @@ def run_with_remediation(
     sim: CompiledSim, *, profiled: bool = False, max_cycles: int = 200_000,
     faults: Optional[FaultPlan] = None, budget: int = 6, growth: int = 2,
     speculative: bool = True,
+    initial_overrides: Optional[Dict[Edge, int]] = None,
 ) -> Tuple[SimResult, List[RemediationAttempt]]:
     """Run; on a capacity-induced deadlock, grow the full FIFOs and retry.
 
@@ -206,6 +207,12 @@ def run_with_remediation(
     (starvation from a dropped beat cannot be sized away) or the budget is
     spent.  Returns the last result plus the attempt log; never raises.
 
+    ``initial_overrides`` seeds the capacity map before the first run — the
+    trace-analysis hook (:func:`repro.trace.recommend_capacities`): when the
+    seed already clears the deadlock, the attempt log stays empty and the
+    geometric ladder is never invoked.  Seeded capacities become the new
+    base the ladder grows from if they turn out to be insufficient.
+
     ``speculative=True`` (default) runs the *whole remaining capacity
     ladder* as one vmapped batch per diagnosis instead of one serial run
     per rung, then walks the rungs in order, re-speculating only when a new
@@ -214,11 +221,13 @@ def run_with_remediation(
     loop (``speculative=False``); only the launch count changes.
     """
     bound, base_cap, in_of = _remediation_bounds(sim, faults)
+    seed = dict(initial_overrides or {})
+    base_cap.update(seed)
 
     ever_full: set = set()
     attempts: List[RemediationAttempt] = []
     res = run_sim(sim, profiled=profiled, max_cycles=max_cycles,
-                  faults=faults)
+                  faults=faults, capacity_overrides=seed or None)
     # speculative ladder state: rung results precomputed for a frozen
     # ever_full set; invalidated whenever the set grows
     spec_frozen: Optional[set] = None
@@ -241,7 +250,8 @@ def run_with_remediation(
                 spec_frozen = set(ever_full)
                 exps = list(range(k + 1, budget + 1))
                 over_list = [
-                    _ladder_overrides(spec_frozen, bound, base_cap, growth, x)
+                    {**seed, **_ladder_overrides(spec_frozen, bound,
+                                                 base_cap, growth, x)}
                     for x in exps]
                 rung_res = run_sim_batch(
                     sim, plans=[faults] * len(exps),
@@ -250,8 +260,8 @@ def run_with_remediation(
                 spec_rungs = dict(zip(exps, zip(over_list, rung_res)))
             overrides, res = spec_rungs[k + 1]
         else:
-            overrides = _ladder_overrides(ever_full, bound, base_cap,
-                                          growth, k + 1)
+            overrides = {**seed, **_ladder_overrides(ever_full, bound,
+                                                     base_cap, growth, k + 1)}
             res = run_sim(sim, profiled=profiled, max_cycles=max_cycles,
                           faults=faults, capacity_overrides=overrides)
         attempts.append(RemediationAttempt(
@@ -263,6 +273,7 @@ def run_with_remediation(
 def remediate_pair(
     sim: CompiledSim, *, max_cycles: int = 200_000,
     faults: Optional[FaultPlan] = None, budget: int = 6, growth: int = 2,
+    initial_overrides: Optional[Dict[Edge, int]] = None,
 ) -> Tuple[SimResult, SimResult, List[RemediationAttempt],
            Dict[Edge, int]]:
     """Joint remediation of the unprofiled+profiled cosim pair.
@@ -270,9 +281,13 @@ def remediate_pair(
     Both lanes run as one batched device program per rung and share a
     single capacity map, so Table-I rows always compare the *same*
     hardware config (remediating each run independently can converge to
-    different FIFO sizes).  Returns ``(ref, prof, attempts, capacities)``.
+    different FIFO sizes).  ``initial_overrides`` seeds the shared map
+    (see :func:`run_with_remediation`).  Returns ``(ref, prof, attempts,
+    capacities)``.
     """
     bound, base_cap, in_of = _remediation_bounds(sim, faults)
+    seed = dict(initial_overrides or {})
+    base_cap.update(seed)
 
     def pair(overrides):
         ref, prof = run_sim_batch(
@@ -283,7 +298,7 @@ def remediate_pair(
 
     ever_full: set = set()
     attempts: List[RemediationAttempt] = []
-    overrides: Dict[Edge, int] = {}
+    overrides: Dict[Edge, int] = dict(seed)
     ref, prof = pair(overrides)
     for k in range(budget):
         if ref.completed and prof.completed:
@@ -297,8 +312,8 @@ def remediate_pair(
         for rep in reports:
             for e in rep.full_edges:
                 ever_full |= set(in_of[e[1]])
-        overrides = _ladder_overrides(ever_full, bound, base_cap, growth,
-                                      k + 1)
+        overrides = {**seed, **_ladder_overrides(ever_full, bound, base_cap,
+                                                 growth, k + 1)}
         ref, prof = pair(overrides)
         done = ref.completed and prof.completed
         attempts.append(RemediationAttempt(
@@ -331,6 +346,10 @@ class CosimReport:
     # the single capacity map both runs executed under (auto_remediate only)
     remediated_capacities: Dict[Edge, int] = dataclasses.field(
         default_factory=dict)
+    # occupancy timelines (repro.trace.TraceStore) when compare(trace=True);
+    # typed as object to keep repro.trace an optional, lazily-imported dep
+    trace_ref: Optional[object] = None
+    trace_prof: Optional[object] = None
 
     @property
     def n_signals(self) -> int:
@@ -374,16 +393,37 @@ def compare(graph: RinnGraph, timing: TimingProfile,
             max_cycles: int = 200_000, *,
             faults: Optional[FaultPlan] = None,
             auto_remediate: bool = False,
-            remediation_budget: int = 6) -> CosimReport:
+            remediation_budget: int = 6,
+            trace: bool = False,
+            trace_windows: int = 256) -> CosimReport:
+    """Run the unprofiled/profiled pair and emit the Table-I report.
+
+    ``trace=True`` attaches window-aligned occupancy timelines
+    (``report.trace_ref`` / ``report.trace_prof``, each a
+    :class:`repro.trace.TraceStore`) captured in the same batched device
+    program — both lanes share one stride, so the pair diffs cleanly.
+    """
     sim = compile_graph(graph, timing)
     attempts: List[RemediationAttempt] = []
     capacities: Dict[Edge, int] = {}
+    trace_ref = trace_prof = None
     if auto_remediate:
         # joint remediation: one capacity map, both lanes batched per rung —
         # Table-I rows always compare the same hardware config
         ref, prof, attempts, capacities = remediate_pair(
             sim, max_cycles=max_cycles, faults=faults,
             budget=remediation_budget)
+        if trace and ref.completed and prof.completed:
+            from repro.trace.capture import trace_pair
+            ((ref, trace_ref), (prof, trace_prof)) = trace_pair(
+                sim, max_cycles=max_cycles, faults=faults,
+                capacity_overrides=capacities or None,
+                windows=trace_windows)
+    elif trace:
+        from repro.trace.capture import trace_pair
+        ((ref, trace_ref), (prof, trace_prof)) = trace_pair(
+            sim, max_cycles=max_cycles, faults=faults,
+            windows=trace_windows)
     else:
         # the unprofiled+profiled pair is one batched device program
         ref, prof = run_sim_batch(
@@ -401,6 +441,7 @@ def compare(graph: RinnGraph, timing: TimingProfile,
         rows=rows, cycles_unprofiled=ref.cycles,
         cycles_profiled=prof.cycles, completed=True, remediation=attempts,
         remediated_capacities=capacities,
+        trace_ref=trace_ref, trace_prof=trace_prof,
     )
 
 

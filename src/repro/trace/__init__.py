@@ -1,0 +1,44 @@
+"""repro.trace — profile-trace analysis: timelines, attribution, export.
+
+The observability back half of SPRING: where :mod:`repro.core` decodes and
+verifies the in-band profile stream, this package keeps the *time axis* and
+turns it into actionable outputs —
+
+  * :class:`TraceStore` — columnar (struct-of-arrays) occupancy timelines,
+    fed by the traced simulator runtime or the collector tap;
+  * :func:`attribute_bottlenecks` — time-at-full/-empty ranking with a
+    root-cause-vs-victim walk over the dataflow graph;
+  * :func:`recommend_capacities` — FIFOAdvisor-style sizing whose capacity
+    map feeds straight back into the cosim remediation loop;
+  * :func:`to_perfetto` / :func:`from_perfetto` — Chrome-trace JSON export
+    (losslessly re-ingestable) plus a compact text report;
+  * :func:`diff_traces` — run-to-run regression detection.
+
+See ``docs/observability.md`` for the end-to-end workflow.
+"""
+from .store import (
+    Channel, ChannelStats, Marker, TraceStore, edge_name, parse_edge,
+)
+from .analyze import (
+    Bottleneck, BottleneckReport, ROLE_HEALTHY, ROLE_ROOT, ROLE_STARVED,
+    ROLE_VICTIM, attribute_bottlenecks,
+)
+from .sizing import SizingAdvice, SizingPlan, recommend_capacities
+from .perfetto import (
+    from_perfetto, read_perfetto, text_report, to_perfetto,
+    validate_chrome_trace, write_perfetto,
+)
+from .diff import ChannelDelta, TraceDiff, diff_traces
+from .capture import trace_lanes, trace_pair, trace_run
+
+__all__ = [
+    "Channel", "ChannelStats", "Marker", "TraceStore",
+    "edge_name", "parse_edge",
+    "Bottleneck", "BottleneckReport", "attribute_bottlenecks",
+    "ROLE_ROOT", "ROLE_VICTIM", "ROLE_STARVED", "ROLE_HEALTHY",
+    "SizingAdvice", "SizingPlan", "recommend_capacities",
+    "to_perfetto", "from_perfetto", "write_perfetto", "read_perfetto",
+    "validate_chrome_trace", "text_report",
+    "ChannelDelta", "TraceDiff", "diff_traces",
+    "trace_run", "trace_pair", "trace_lanes",
+]

@@ -1,0 +1,166 @@
+"""Bottleneck attribution — from occupancy timelines to root causes.
+
+A FIFO sitting at capacity is not automatically the problem: in a
+backpressure chain ``a → b → c`` where ``c``'s FIFO is undersized, the
+upstream FIFOs fill up too and every naive "most-full FIFO" ranking blames
+the wrong edge.  The attribution here walks the dataflow graph recovered
+from the channel names: a saturated edge whose *downstream* edges (the
+out-edges of its consumer) are also saturated is a **victim**; a saturated
+edge with no saturated edge downstream of it is where the pressure
+originates — the **root cause** (the FIFOAdvisor-style resize target).
+When the run stalled, edges the deadlock diagnosis saw empty under a
+blocked consumer are **starved** (a drop/stall upstream — growing them
+cannot help); a completed run's drained-and-idle edges stay healthy.
+
+When the run deadlocked, the ranking is cross-checked against the
+simulator's :class:`~repro.rinn.cosim.DeadlockReport`: every FIFO the
+deadlock diagnosis saw at capacity must be saturated in the trace too.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from .store import Edge, TraceStore, parse_edge
+
+ROLE_ROOT = "root_cause"
+ROLE_VICTIM = "victim"
+ROLE_STARVED = "starved"
+ROLE_HEALTHY = "healthy"
+
+_ROLE_RANK = {ROLE_ROOT: 0, ROLE_VICTIM: 1, ROLE_STARVED: 2, ROLE_HEALTHY: 3}
+
+
+@dataclasses.dataclass(frozen=True)
+class Bottleneck:
+    """One ranked channel with its attribution verdict."""
+
+    name: str
+    edge: Optional[Edge]
+    role: str
+    full_frac: float
+    empty_frac: float
+    peak: float
+    capacity: Optional[int]
+
+    @property
+    def utilization(self) -> float:
+        if not self.capacity:
+            return 0.0
+        return self.peak / float(self.capacity)
+
+
+@dataclasses.dataclass
+class BottleneckReport:
+    """Channels ranked most-suspect first, plus the deadlock cross-check."""
+
+    ranked: List[Bottleneck]
+    saturated: List[str]                   # channels that ever hit capacity
+    deadlock_consistent: Optional[bool] = None   # None = no deadlock given
+    deadlock_missing: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def root_causes(self) -> List[Bottleneck]:
+        return [b for b in self.ranked if b.role == ROLE_ROOT]
+
+    @property
+    def victims(self) -> List[Bottleneck]:
+        return [b for b in self.ranked if b.role == ROLE_VICTIM]
+
+    def top(self, n: int = 5) -> List[Bottleneck]:
+        return self.ranked[:n]
+
+    def summary(self, n: int = 8) -> str:
+        lines = [
+            f"# bottleneck report — {len(self.ranked)} channel(s), "
+            f"{len(self.saturated)} saturated, "
+            f"{len(self.root_causes)} root cause(s)"
+        ]
+        if self.deadlock_consistent is not None:
+            verdict = ("consistent" if self.deadlock_consistent
+                       else f"INCONSISTENT (missing: {self.deadlock_missing})")
+            lines.append(f"# deadlock cross-check: {verdict}")
+        for b in self.top(n):
+            cap = f"/{b.capacity}" if b.capacity is not None else ""
+            lines.append(
+                f"{b.name:34s} {b.role:10s} full={b.full_frac:6.1%} "
+                f"empty={b.empty_frac:6.1%} peak={b.peak:g}{cap}")
+        return "\n".join(lines)
+
+    def __str__(self) -> str:
+        return self.summary()
+
+
+def attribute_bottlenecks(
+    store: TraceStore, *,
+    deadlock=None,
+    full_threshold: float = 0.0,
+) -> BottleneckReport:
+    """Rank channels by time-at-full and attribute pressure direction.
+
+    ``full_threshold`` is the fraction of samples at capacity above which
+    an edge counts as saturated (0 = any full sample).  ``deadlock`` is an
+    optional :class:`~repro.rinn.cosim.DeadlockReport`: it is cross-checked
+    against the trace, and its starved edges (empty FIFOs under a blocked
+    consumer) pick up the ``starved`` role — a timeline alone cannot tell
+    starvation from a pipeline that simply drained and finished.
+    """
+    from .store import edge_name
+
+    stats = store.channel_stats()
+    saturated = {s.name for s in stats
+                 if s.capacity is not None and s.full_frac > full_threshold}
+    starved_names = ({edge_name(e) for e in deadlock.empty_edges}
+                     if deadlock is not None else set())
+
+    # graph recovered from channel names: consumer -> its out-edge channels
+    out_of: Dict[str, List[str]] = {}
+    for ch in store.channels:
+        e = ch.edge
+        if e is not None:
+            out_of.setdefault(e[0], []).append(ch.name)
+
+    def downstream_saturated(edge: Edge) -> bool:
+        """True if pressure provably arrives from below: some edge out of
+        this edge's consumer (transitively) is saturated."""
+        seen = set()
+        frontier = list(out_of.get(edge[1], ()))
+        while frontier:
+            name = frontier.pop()
+            if name in seen:
+                continue
+            seen.add(name)
+            if name in saturated:
+                return True
+            e = parse_edge(name)
+            if e is not None:
+                frontier.extend(out_of.get(e[1], ()))
+        return False
+
+    entries: List[Bottleneck] = []
+    for s in stats:
+        ch = store.channel(s.name)
+        edge = ch.edge
+        if s.name in saturated:
+            role = (ROLE_VICTIM if edge is not None
+                    and downstream_saturated(edge) else ROLE_ROOT)
+        elif s.name in starved_names:
+            role = ROLE_STARVED
+        else:
+            role = ROLE_HEALTHY
+        entries.append(Bottleneck(
+            name=s.name, edge=edge, role=role, full_frac=s.full_frac,
+            empty_frac=s.empty_frac, peak=s.peak, capacity=s.capacity))
+
+    entries.sort(key=lambda b: (_ROLE_RANK[b.role], -b.full_frac,
+                                -b.utilization, b.name))
+
+    consistent: Optional[bool] = None
+    missing: List[str] = []
+    if deadlock is not None:
+        want = {edge_name(e) for e in deadlock.full_edges}
+        missing = sorted(want - saturated)
+        consistent = not missing
+    return BottleneckReport(
+        ranked=entries, saturated=sorted(saturated),
+        deadlock_consistent=consistent, deadlock_missing=missing)

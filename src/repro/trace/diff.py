@@ -1,0 +1,114 @@
+"""Run-to-run trace diffing — regression detection for benchmarks.
+
+Two traces of the same design (different commits, timing profiles, fault
+plans…) are compared channel-by-channel on the whole-trace aggregates:
+peak occupancy, mean occupancy, and time-at-full / time-at-empty
+fractions.  ``TraceDiff.regressions()`` applies thresholds so a benchmark
+can fail loudly when a FIFO got deeper or a stall fraction grew, and
+``summary()`` prints the per-channel movement table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from .store import ChannelStats, TraceStore
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelDelta:
+    """One channel's movement between trace A (baseline) and trace B."""
+
+    name: str
+    kind: str
+    peak_a: float
+    peak_b: float
+    mean_a: float
+    mean_b: float
+    full_frac_a: float
+    full_frac_b: float
+    empty_frac_a: float
+    empty_frac_b: float
+
+    @property
+    def peak_delta(self) -> float:
+        return self.peak_b - self.peak_a
+
+    @property
+    def mean_delta(self) -> float:
+        return self.mean_b - self.mean_a
+
+    @property
+    def full_frac_delta(self) -> float:
+        return self.full_frac_b - self.full_frac_a
+
+    @property
+    def changed(self) -> bool:
+        return (self.peak_delta != 0 or self.mean_delta != 0
+                or self.full_frac_delta != 0
+                or self.empty_frac_b != self.empty_frac_a)
+
+
+@dataclasses.dataclass
+class TraceDiff:
+    """Channel deltas plus membership changes between two traces."""
+
+    deltas: List[ChannelDelta]
+    only_a: List[str]       # channels that disappeared
+    only_b: List[str]       # channels that appeared
+    cycles_a: int
+    cycles_b: int
+
+    def regressions(self, *, peak_tol: float = 0.0,
+                    frac_tol: float = 0.02) -> List[ChannelDelta]:
+        """Channels that got *worse* in B beyond tolerance: deeper peak
+        occupancy or a larger time-at-full fraction."""
+        return [d for d in self.deltas
+                if d.peak_delta > peak_tol or d.full_frac_delta > frac_tol]
+
+    @property
+    def cycles_delta(self) -> int:
+        return self.cycles_b - self.cycles_a
+
+    def summary(self, *, changed_only: bool = True) -> str:
+        lines = [
+            f"# trace diff — {len(self.deltas)} shared channel(s), "
+            f"cycles {self.cycles_a} -> {self.cycles_b} "
+            f"({self.cycles_delta:+d})"
+        ]
+        if self.only_a:
+            lines.append(f"  only in A: {', '.join(self.only_a)}")
+        if self.only_b:
+            lines.append(f"  only in B: {', '.join(self.only_b)}")
+        shown = [d for d in self.deltas if d.changed or not changed_only]
+        for d in shown:
+            lines.append(
+                f"{d.name:34s} peak {d.peak_a:g}->{d.peak_b:g} "
+                f"mean {d.mean_a:.2f}->{d.mean_b:.2f} "
+                f"full {d.full_frac_a:.1%}->{d.full_frac_b:.1%}")
+        if not shown:
+            lines.append("  (no per-channel movement)")
+        return "\n".join(lines)
+
+    def __str__(self) -> str:
+        return self.summary()
+
+
+def diff_traces(a: TraceStore, b: TraceStore) -> TraceDiff:
+    """Compare two traces by channel name (order-independent)."""
+    sa: Dict[str, ChannelStats] = a.stats_by_name()
+    sb: Dict[str, ChannelStats] = b.stats_by_name()
+    shared = [n for n in sa if n in sb]
+    deltas = [
+        ChannelDelta(
+            name=n, kind=sa[n].kind,
+            peak_a=sa[n].peak, peak_b=sb[n].peak,
+            mean_a=sa[n].mean, mean_b=sb[n].mean,
+            full_frac_a=sa[n].full_frac, full_frac_b=sb[n].full_frac,
+            empty_frac_a=sa[n].empty_frac, empty_frac_b=sb[n].empty_frac)
+        for n in shared
+    ]
+    return TraceDiff(
+        deltas=deltas,
+        only_a=sorted(set(sa) - set(sb)), only_b=sorted(set(sb) - set(sa)),
+        cycles_a=a.total_cycles, cycles_b=b.total_cycles)

@@ -1,0 +1,230 @@
+"""Chrome-trace / Perfetto JSON export and lossless re-ingest.
+
+Emits the Trace Event Format (the JSON flavour Perfetto and
+``chrome://tracing`` load directly):
+
+  * one **counter track** per channel (``"ph": "C"``) carrying the five
+    store columns as series — occupancy plots over the run;
+  * **duration events** (``"ph": "X"``) for contiguous backpressure
+    (windows with samples at capacity) and starvation (windows spent
+    entirely empty) intervals, one thread lane per channel;
+  * **instant events** (``"ph": "i"``) for store markers (supervisor
+    degradations, fault activations);
+  * ``process_name`` / ``thread_name`` metadata so tracks are labelled.
+
+Timestamps are window starts in the store's native unit (simulator cycles
+or host steps) mapped 1:1 onto the format's microsecond field.  Channel
+metadata and the window stride ride in the top-level ``otherData`` object
+(ignored by viewers), which is what makes ``from_perfetto`` a lossless
+inverse of ``to_perfetto`` — the round trip is tested.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Union
+
+import numpy as np
+
+from .store import Channel, Marker, TraceStore
+
+_PID = 1
+_ARG_KEYS = ("occ_max", "occ_sum", "samples", "full_cycles", "empty_cycles")
+_PHASES = {"C", "X", "i", "M", "B", "E"}
+
+
+def _num(x):
+    """JSON-native scalar: ints stay ints, floats stay floats (exact)."""
+    f = float(x)
+    i = int(f)
+    return i if i == f else f
+
+
+def to_perfetto(store: TraceStore, *, process_name: str = "spring.trace",
+                stall_threshold: float = 0.0) -> Dict:
+    """Render the store as a Chrome-trace JSON object.
+
+    ``stall_threshold`` is the fraction of a window's samples that must be
+    at capacity for the window to join a backpressure duration event.
+    """
+    wc = store.window_cycles
+    ev: List[Dict] = [{
+        "ph": "M", "name": "process_name", "pid": _PID, "tid": 0,
+        "args": {"name": process_name},
+    }]
+    cols = {k: store.column(k) for k in _ARG_KEYS}
+    n_w = store.n_windows
+    for tid, ch in enumerate(store.channels, start=1):
+        ev.append({"ph": "M", "name": "thread_name", "pid": _PID,
+                   "tid": tid, "args": {"name": ch.name}})
+        for w in range(n_w):
+            if cols["samples"][tid - 1, w] == 0:
+                continue
+            args = {k: _num(cols[k][tid - 1, w]) for k in _ARG_KEYS}
+            if ch.capacity is not None:
+                args["capacity"] = int(ch.capacity)
+            ev.append({"ph": "C", "pid": _PID, "tid": tid,
+                       "name": ch.name, "ts": w * wc, "args": args})
+        if ch.kind != "fifo":
+            continue
+        samples = cols["samples"][tid - 1]
+        full = cols["full_cycles"][tid - 1]
+        empty = cols["empty_cycles"][tid - 1]
+        is_full = (samples > 0) & (full > stall_threshold * samples)
+        is_starved = (samples > 0) & (empty == samples)
+        for cat, mask in (("backpressure", is_full), ("starved", is_starved)):
+            for lo, hi in _runs(mask):
+                ev.append({
+                    "ph": "X", "pid": _PID, "tid": tid, "cat": "stall",
+                    "name": f"{cat} {ch.name}", "ts": lo * wc,
+                    "dur": (hi - lo) * wc,
+                })
+    for m in store.markers:
+        ev.append({"ph": "i", "s": "g", "pid": _PID, "tid": 0,
+                   "name": m.name, "ts": m.window * wc,
+                   "args": {"detail": m.detail}})
+    return {
+        "traceEvents": ev,
+        "displayTimeUnit": "ms",
+        "otherData": {
+            "generator": "repro.trace",
+            "window_cycles": wc,
+            "time_unit": store.time_unit,
+            "n_windows": n_w,
+            "channels": [
+                {"name": c.name, "kind": c.kind, "capacity": c.capacity}
+                for c in store.channels
+            ],
+        },
+    }
+
+
+def _runs(mask: np.ndarray):
+    """Contiguous True runs of a 1-D bool mask as (start, stop) pairs."""
+    idx = np.flatnonzero(mask)
+    if idx.size == 0:
+        return
+    splits = np.flatnonzero(np.diff(idx) > 1)
+    start = 0
+    for s in list(splits) + [idx.size - 1]:
+        yield int(idx[start]), int(idx[s]) + 1
+        start = s + 1
+
+
+def from_perfetto(obj: Union[Dict, str]) -> TraceStore:
+    """Rebuild a :class:`TraceStore` from ``to_perfetto`` output.
+
+    Accepts the dict or its JSON text.  Counter-event args plus the
+    ``otherData`` channel table restore the store exactly (lossless for
+    traces produced by :func:`to_perfetto`).
+    """
+    if isinstance(obj, str):
+        obj = json.loads(obj)
+    meta = obj.get("otherData", {})
+    if "channels" not in meta:
+        raise ValueError("not a repro.trace export: otherData.channels "
+                         "missing")
+    wc = int(meta.get("window_cycles", 1))
+    channels = [Channel(name=c["name"], kind=c.get("kind", "fifo"),
+                        capacity=c.get("capacity"))
+                for c in meta["channels"]]
+    store = TraceStore(channels, window_cycles=wc,
+                       time_unit=meta.get("time_unit", "cycles"))
+    n_w = int(meta.get("n_windows", 0))
+    store._ensure_windows(n_w)
+    store._n_windows = n_w
+    idx = {c.name: i for i, c in enumerate(channels)}
+    for e in obj.get("traceEvents", ()):
+        ph = e.get("ph")
+        if ph == "C" and e.get("name") in idx:
+            i = idx[e["name"]]
+            w = int(e["ts"]) // wc
+            for k in _ARG_KEYS:
+                if k in e.get("args", {}):
+                    store._cols[k][i, w] = e["args"][k]
+        elif ph == "i":
+            store.markers.append(Marker(
+                window=int(e["ts"]) // wc, name=e.get("name", ""),
+                detail=e.get("args", {}).get("detail", "")))
+    return store
+
+
+def write_perfetto(store: TraceStore, path, **kw) -> Path:
+    """Serialize to ``path``; returns the path written."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(to_perfetto(store, **kw)))
+    return path
+
+
+def read_perfetto(path) -> TraceStore:
+    return from_perfetto(json.loads(Path(path).read_text()))
+
+
+def validate_chrome_trace(obj: Union[Dict, str]) -> List[str]:
+    """Structural check against the Trace Event Format.
+
+    Returns a list of violations (empty = valid).  Covers the invariants
+    Perfetto's JSON importer actually enforces: a ``traceEvents`` array,
+    known phase codes, numeric non-negative timestamps, ``dur`` on
+    complete events, and ``args`` objects where present.
+    """
+    errors: List[str] = []
+    if isinstance(obj, str):
+        try:
+            obj = json.loads(obj)
+        except json.JSONDecodeError as e:
+            return [f"not JSON: {e}"]
+    if not isinstance(obj, dict):
+        return ["top level must be an object (or a bare event array)"]
+    events = obj.get("traceEvents")
+    if not isinstance(events, list):
+        return ["traceEvents missing or not an array"]
+    for k, e in enumerate(events):
+        where = f"traceEvents[{k}]"
+        if not isinstance(e, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        ph = e.get("ph")
+        if ph not in _PHASES:
+            errors.append(f"{where}: unknown phase {ph!r}")
+            continue
+        if not isinstance(e.get("name", ""), str):
+            errors.append(f"{where}: name must be a string")
+        if ph != "M":
+            ts = e.get("ts")
+            if not isinstance(ts, (int, float)) or ts < 0:
+                errors.append(f"{where}: ts missing/negative")
+        if ph == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errors.append(f"{where}: complete event needs dur >= 0")
+        if "args" in e and not isinstance(e["args"], dict):
+            errors.append(f"{where}: args must be an object")
+        if "pid" in e and not isinstance(e["pid"], int):
+            errors.append(f"{where}: pid must be an integer")
+    return errors
+
+
+def text_report(store: TraceStore, *, top: int = 0) -> str:
+    """Compact per-channel table (the no-viewer fallback)."""
+    stats = store.channel_stats()
+    if top:
+        stats = sorted(stats, key=lambda s: -s.full_frac)[:top]
+    total = store.total_cycles
+    lines = [
+        f"# trace — {store.n_channels} channel(s), {store.n_windows} "
+        f"window(s) x {store.window_cycles} {store.time_unit}, "
+        f"{total} {store.time_unit} total",
+        f"{'channel':34s} {'kind':7s} {'peak':>8s} {'mean':>8s} "
+        f"{'full%':>7s} {'empty%':>7s} {'cap':>6s}",
+    ]
+    for s in stats:
+        cap = f"{s.capacity}" if s.capacity is not None else "-"
+        lines.append(
+            f"{s.name:34s} {s.kind:7s} {s.peak:8g} {s.mean:8.2f} "
+            f"{s.full_frac:7.1%} {s.empty_frac:7.1%} {cap:>6s}")
+    for m in store.markers:
+        lines.append(f"@window {m.window}: {m.name}"
+                     + (f" ({m.detail})" if m.detail else ""))
+    return "\n".join(lines)

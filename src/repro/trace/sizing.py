@@ -1,0 +1,143 @@
+"""FIFOAdvisor-style capacity recommendations from observed traces.
+
+The cosim remediation loop (:func:`repro.rinn.cosim.run_with_remediation`)
+discovers workable FIFO sizes *reactively*: deadlock, grow geometrically,
+retry.  With a trace in hand we can do better in one shot:
+
+  * an edge that spent time at capacity gets its **demand bound** — the
+    producer's total beat count, which provably removes backpressure (the
+    same cap the remediation ladder converges to);
+  * an edge that never came close to its capacity gets a shrink advisory
+    (peak plus slack) — the BRAM the build is wasting;
+  * everything else is left alone.
+
+``SizingPlan.capacity_map()`` is directly consumable as the
+``initial_overrides`` of :func:`~repro.rinn.cosim.run_with_remediation` /
+:func:`~repro.rinn.cosim.remediate_pair`: when the trace saw the real
+bottlenecks, the seeded run completes on the first attempt and the
+geometric ladder is never invoked.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+from .store import Edge, TraceStore
+
+GROW = "grow"
+SHRINK = "shrink"
+KEEP = "keep"
+
+
+@dataclasses.dataclass(frozen=True)
+class SizingAdvice:
+    edge: Edge
+    current: int
+    recommended: int
+    action: str          # grow | shrink | keep
+    reason: str
+
+    @property
+    def delta(self) -> int:
+        return self.recommended - self.current
+
+
+@dataclasses.dataclass
+class SizingPlan:
+    """Per-edge advice plus the capacity map that closes the loop."""
+
+    advice: List[SizingAdvice]
+
+    def capacity_map(self, *, include_shrink: bool = False
+                     ) -> Dict[Edge, int]:
+        """Overrides for the simulator/remediation loop.
+
+        Grow entries only by default — shrink advisories are savings
+        estimates, and feeding them back without a verification run could
+        *introduce* a deadlock the trace never saw.
+        """
+        actions = (GROW, SHRINK) if include_shrink else (GROW,)
+        return {a.edge: a.recommended for a in self.advice
+                if a.action in actions}
+
+    @property
+    def grown(self) -> List[SizingAdvice]:
+        return [a for a in self.advice if a.action == GROW]
+
+    @property
+    def shrunk(self) -> List[SizingAdvice]:
+        return [a for a in self.advice if a.action == SHRINK]
+
+    @property
+    def words_saved(self) -> int:
+        """Net FIFO words freed if all advice (both directions) is taken."""
+        return -sum(a.delta for a in self.advice)
+
+    def summary(self) -> str:
+        lines = [f"# sizing plan — {len(self.grown)} grow / "
+                 f"{len(self.shrunk)} shrink "
+                 f"(net {-self.words_saved:+d} words)"]
+        for a in self.advice:
+            if a.action == KEEP:
+                continue
+            lines.append(f"{'->'.join(a.edge):34s} {a.action:6s} "
+                         f"{a.current:5d} -> {a.recommended:5d}  ({a.reason})")
+        return "\n".join(lines)
+
+    def __str__(self) -> str:
+        return self.summary()
+
+
+def recommend_capacities(
+    store: TraceStore, sim=None, *,
+    slack: float = 0.25, shrink: bool = True,
+    full_threshold: float = 0.0,
+) -> SizingPlan:
+    """Derive a capacity plan from one trace.
+
+    ``sim`` (a :class:`~repro.rinn.streamsim.CompiledSim`) supplies the
+    demand bound for saturated edges; without it, saturated edges fall
+    back to doubling-to-the-next-power-of-two above the observed peak.
+    ``slack`` is the headroom fraction kept above the peak when shrinking.
+    """
+    bound: Dict[Edge, int] = {}
+    if sim is not None:
+        node_of = {nid: i for i, nid in enumerate(sim.node_ids)}
+        bound = {e: max(2, int(sim.total_out[node_of[e[0]]]))
+                 for e in sim.edge_list}
+
+    advice: List[SizingAdvice] = []
+    for s in store.channel_stats():
+        ch = store.channel(s.name)
+        e = ch.edge
+        if e is None or ch.capacity is None:
+            continue
+        cap = int(ch.capacity)
+        if s.full_frac > full_threshold:
+            if e in bound:
+                rec, why = bound[e], "demand bound (producer beats)"
+            else:
+                rec = max(2, 1 << math.ceil(math.log2(max(s.peak, 1) * 2)))
+                why = "2x peak, next pow2 (no machine given)"
+            if rec > cap:
+                advice.append(SizingAdvice(
+                    edge=e, current=cap, recommended=rec, action=GROW,
+                    reason=f"at capacity {s.full_frac:.1%} of run; {why}"))
+                continue
+            # full but already at/above its demand bound: transiently full
+            # by construction, not a deadlock risk — leave it alone
+            advice.append(SizingAdvice(
+                edge=e, current=cap, recommended=cap, action=KEEP,
+                reason="full only at demand bound"))
+            continue
+        want = max(2, int(math.ceil(s.peak * (1.0 + slack))) + 1)
+        if shrink and want < cap:
+            advice.append(SizingAdvice(
+                edge=e, current=cap, recommended=want, action=SHRINK,
+                reason=f"peak {s.peak:g} << capacity {cap}"))
+        else:
+            advice.append(SizingAdvice(
+                edge=e, current=cap, recommended=cap, action=KEEP,
+                reason="sized to demand"))
+    return SizingPlan(advice=advice)

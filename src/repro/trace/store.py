@@ -1,0 +1,331 @@
+"""Columnar trace store — struct-of-arrays timelines of FIFO/signal state.
+
+Everything downstream of ``decode_verified()`` used to stop at running
+aggregates (:class:`repro.core.collector.ProfileCollector`).  The store keeps
+the *time axis*: one column per window (a fixed number of simulator cycles,
+or one host step for collector-fed traces), one row per channel (a FIFO edge
+of the dataflow machine, or a named profile signal).
+
+Layout is struct-of-arrays so whole-trace analytics are single vectorized
+reductions (jnp) instead of per-record python:
+
+  * ``occ_max``      [C, W]  within-window max occupancy,
+  * ``occ_sum``      [C, W]  sum of sampled occupancies (exact mean = sum/n),
+  * ``samples``      [C, W]  samples folded into the window,
+  * ``full_cycles``  [C, W]  samples at capacity (backpressure),
+  * ``empty_cycles`` [C, W]  samples at zero (starvation).
+
+Occupancy columns are float64 and count columns int64 — both survive a
+JSON repr round trip exactly, so export → re-ingest is lossless
+(see :mod:`repro.trace.perfetto`).  Host-side appends (the collector tap)
+grow the window axis amortized-doubling; ``as_jax()`` exposes the trimmed
+columns as jnp arrays and the windowed statistics run on them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+Edge = Tuple[str, str]
+
+EDGE_SEP = "->"
+
+
+def edge_name(edge: Edge) -> str:
+    return EDGE_SEP.join(edge)
+
+
+def parse_edge(name: str) -> Optional[Edge]:
+    if EDGE_SEP in name:
+        s, d = name.split(EDGE_SEP, 1)
+        return (s, d)
+    return None
+
+
+@dataclasses.dataclass(frozen=True)
+class Channel:
+    """One traced timeline: a FIFO edge or a decoded profile signal."""
+
+    name: str
+    kind: str = "fifo"               # "fifo" | "signal"
+    capacity: Optional[int] = None   # FIFO capacity, when known
+
+    @property
+    def edge(self) -> Optional[Edge]:
+        return parse_edge(self.name) if self.kind == "fifo" else None
+
+
+@dataclasses.dataclass(frozen=True)
+class Marker:
+    """An instant annotation on the trace timeline (e.g. a supervisor
+    degradation event) — exported as a Perfetto instant event."""
+
+    window: int
+    name: str
+    detail: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelStats:
+    """Whole-trace aggregate of one channel's timeline."""
+
+    name: str
+    kind: str
+    capacity: Optional[int]
+    peak: float          # max occupancy ever observed
+    mean: float          # exact mean over all samples
+    full_frac: float     # fraction of samples at capacity
+    empty_frac: float    # fraction of samples empty
+    samples: int
+
+    @property
+    def utilization(self) -> float:
+        """Peak occupancy over capacity (1.0 = the FIFO filled up)."""
+        if not self.capacity:
+            return 0.0
+        return self.peak / float(self.capacity)
+
+
+_COLS = ("occ_max", "occ_sum", "samples", "full_cycles", "empty_cycles")
+_COL_DTYPES = {
+    "occ_max": np.float64, "occ_sum": np.float64,  # fractional signals OK
+    "samples": np.int64, "full_cycles": np.int64, "empty_cycles": np.int64,
+}
+
+
+class TraceStore:
+    """Columnar windowed trace; grows by whole windows (steps) host-side."""
+
+    def __init__(self, channels: Sequence[Channel] = (), *,
+                 window_cycles: int = 1, time_unit: str = "cycles"):
+        if window_cycles < 1:
+            raise ValueError("window_cycles must be >= 1")
+        self.window_cycles = int(window_cycles)
+        self.time_unit = time_unit
+        self.markers: List[Marker] = []
+        self._channels: List[Channel] = []
+        self._index: Dict[str, int] = {}
+        self._n_windows = 0
+        self._cols: Dict[str, np.ndarray] = {
+            c: np.zeros((0, 0), _COL_DTYPES[c]) for c in _COLS}
+        for ch in channels:
+            self._add_channel(ch)
+
+    # ------------------------------------------------------------------ #
+    # construction
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def from_sim(cls, sim, result, buffers) -> "TraceStore":
+        """Build a store from one traced simulator run.
+
+        ``sim`` is the :class:`~repro.rinn.streamsim.CompiledSim`,
+        ``result`` its :class:`~repro.rinn.streamsim.SimResult`, and
+        ``buffers`` the :class:`~repro.rinn.batchsim.TraceBuffers` the
+        traced runtime produced alongside it.
+        """
+        channels = [Channel(name=edge_name(e), kind="fifo",
+                            capacity=result.fifo_capacity.get(e))
+                    for e in sim.edge_list]
+        store = cls(channels, window_cycles=buffers.stride,
+                    time_unit="cycles")
+        W = buffers.occ_max.shape[0]
+        store._ensure_windows(W)
+        store._n_windows = W
+        # simulator buffers are [W, E]; the store is [C, W]
+        store._cols["occ_max"][:, :W] = buffers.occ_max.T
+        store._cols["occ_sum"][:, :W] = buffers.occ_sum.T
+        store._cols["full_cycles"][:, :W] = buffers.full_cycles.T
+        store._cols["empty_cycles"][:, :W] = buffers.empty_cycles.T
+        store._cols["samples"][:, :W] = np.broadcast_to(
+            buffers.window_cycles[None, :], (len(channels), W))
+        return store
+
+    # ------------------------------------------------------------------ #
+    # host-side append (the collector tap)
+    # ------------------------------------------------------------------ #
+    def record_step(self, values: Mapping[str, np.ndarray], *,
+                    capacities: Optional[Mapping[str, int]] = None) -> int:
+        """Fold one step's decoded signals in as a new window.
+
+        Vector-valued signals contribute ``len(v)`` samples to the window
+        (max/sum/full/empty computed over the vector).  Channels are
+        auto-registered on first sight; returns the window index.
+        """
+        w = self._n_windows
+        self._ensure_windows(w + 1)
+        self._n_windows = w + 1
+        for name, vals in values.items():
+            i = self._index.get(name)
+            if i is None:
+                cap = (capacities or {}).get(name)
+                i = self._add_channel(Channel(name=name, kind="signal",
+                                              capacity=cap))
+            v = np.atleast_1d(np.asarray(vals, np.float64)).reshape(-1)
+            if v.size == 0:
+                continue
+            cap = self._channels[i].capacity
+            self._cols["occ_max"][i, w] = v.max()
+            self._cols["occ_sum"][i, w] = v.sum()
+            self._cols["samples"][i, w] = v.size
+            if cap is not None:
+                self._cols["full_cycles"][i, w] = int((v >= cap).sum())
+            self._cols["empty_cycles"][i, w] = int((v == 0).sum())
+        return w
+
+    def add_marker(self, name: str, detail: str = "",
+                   window: Optional[int] = None) -> None:
+        self.markers.append(Marker(
+            window=self._n_windows if window is None else window,
+            name=name, detail=detail))
+
+    # ------------------------------------------------------------------ #
+    # geometry
+    # ------------------------------------------------------------------ #
+    @property
+    def channels(self) -> List[Channel]:
+        return list(self._channels)
+
+    @property
+    def n_channels(self) -> int:
+        return len(self._channels)
+
+    @property
+    def n_windows(self) -> int:
+        return self._n_windows
+
+    @property
+    def total_cycles(self) -> int:
+        if not self._n_windows:
+            return 0
+        return int(self._col("samples").max(axis=0).sum())
+
+    def channel(self, name: str) -> Channel:
+        return self._channels[self._index[name]]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._index
+
+    def __repr__(self):
+        return (f"TraceStore(channels={self.n_channels}, "
+                f"windows={self.n_windows}, "
+                f"window_cycles={self.window_cycles}, "
+                f"unit={self.time_unit!r})")
+
+    # ------------------------------------------------------------------ #
+    # column access
+    # ------------------------------------------------------------------ #
+    def _col(self, name: str) -> np.ndarray:
+        return self._cols[name][:, :self._n_windows]
+
+    def column(self, name: str) -> np.ndarray:
+        """Trimmed [C, W] column (numpy view; do not mutate)."""
+        if name not in _COLS:
+            raise KeyError(f"unknown column {name!r}; have {_COLS}")
+        return self._col(name)
+
+    def as_jax(self) -> Dict[str, jnp.ndarray]:
+        """The five columns as jnp arrays — the analytics substrate."""
+        return {c: jnp.asarray(self._col(c)) for c in _COLS}
+
+    def timeline(self, name: str) -> Dict[str, np.ndarray]:
+        """One channel's per-window series, by column name."""
+        i = self._index[name]
+        return {c: self._col(c)[i].copy() for c in _COLS}
+
+    # ------------------------------------------------------------------ #
+    # analytics
+    # ------------------------------------------------------------------ #
+    def channel_stats(self) -> List[ChannelStats]:
+        """Vectorized whole-trace aggregates, one entry per channel."""
+        if not self._n_windows or not self._channels:
+            return [ChannelStats(c.name, c.kind, c.capacity, 0.0, 0.0,
+                                 0.0, 0.0, 0) for c in self._channels]
+        cols = self.as_jax()
+        n = jnp.maximum(cols["samples"].sum(axis=1), 1)
+        peak = jnp.max(cols["occ_max"], axis=1)
+        mean = cols["occ_sum"].sum(axis=1) / n
+        full = cols["full_cycles"].sum(axis=1) / n
+        empty = cols["empty_cycles"].sum(axis=1) / n
+        tot = np.asarray(cols["samples"].sum(axis=1))
+        peak, mean, full, empty = (np.asarray(a) for a in
+                                   (peak, mean, full, empty))
+        return [
+            ChannelStats(
+                name=c.name, kind=c.kind, capacity=c.capacity,
+                peak=float(peak[i]), mean=float(mean[i]),
+                full_frac=float(full[i]), empty_frac=float(empty[i]),
+                samples=int(tot[i]))
+            for i, c in enumerate(self._channels)
+        ]
+
+    def stats_by_name(self) -> Dict[str, ChannelStats]:
+        return {s.name: s for s in self.channel_stats()}
+
+    def rebin(self, factor: int) -> "TraceStore":
+        """Coarsen the time axis: every ``factor`` windows fold into one."""
+        if factor < 1:
+            raise ValueError("factor must be >= 1")
+        if factor == 1:
+            return self
+        W = self._n_windows
+        Wn = -(-W // factor)
+        out = TraceStore(self._channels,
+                         window_cycles=self.window_cycles * factor,
+                         time_unit=self.time_unit)
+        out._ensure_windows(Wn)
+        out._n_windows = Wn
+        C = self.n_channels
+        pad = Wn * factor - W
+        for cname in _COLS:
+            col = self._col(cname)
+            if pad:
+                col = np.concatenate(
+                    [col, np.zeros((C, pad), col.dtype)], axis=1)
+            blocks = col.reshape(C, Wn, factor)
+            out._cols[cname][:, :Wn] = (
+                blocks.max(axis=2) if cname == "occ_max"
+                else blocks.sum(axis=2))
+        out.markers = [dataclasses.replace(m, window=m.window // factor)
+                       for m in self.markers]
+        return out
+
+    def equals(self, other: "TraceStore") -> bool:
+        """Exact content equality (the round-trip test predicate)."""
+        if (self.window_cycles != other.window_cycles
+                or self.time_unit != other.time_unit
+                or self._n_windows != other._n_windows
+                or [dataclasses.astuple(c) for c in self._channels]
+                != [dataclasses.astuple(c) for c in other._channels]
+                or self.markers != other.markers):
+            return False
+        return all((self._col(c) == other._col(c)).all() for c in _COLS)
+
+    # ------------------------------------------------------------------ #
+    # growth
+    # ------------------------------------------------------------------ #
+    def _add_channel(self, ch: Channel) -> int:
+        if ch.name in self._index:
+            raise ValueError(f"duplicate channel {ch.name!r}")
+        i = len(self._channels)
+        self._channels.append(ch)
+        self._index[ch.name] = i
+        w_cap = self._cols["occ_max"].shape[1]
+        for c in _COLS:
+            self._cols[c] = np.concatenate(
+                [self._cols[c], np.zeros((1, w_cap), _COL_DTYPES[c])],
+                axis=0)
+        return i
+
+    def _ensure_windows(self, n: int) -> None:
+        have = self._cols["occ_max"].shape[1]
+        if n <= have:
+            return
+        grow = max(n, have * 2 if have else 8)
+        C = len(self._channels)
+        for c in _COLS:
+            buf = np.zeros((C, grow), _COL_DTYPES[c])
+            buf[:, :have] = self._cols[c]
+            self._cols[c] = buf

@@ -265,6 +265,98 @@ def test_collector_quarantine_accounting():
 
 
 # --------------------------------------------------------------------- #
+# layer 3b: CRC-32 guard mode + truncated/interleaved verified decode
+# --------------------------------------------------------------------- #
+def crc_stream():
+    s = ProfileStream.create()
+    s = s.append_guarded("l0/rms", "act_rms", jnp.array([1.5, 2.5]),
+                         algo="crc32")
+    s = s.append_guarded("l1/rms", "act_rms", jnp.array([3.0]),
+                         algo="crc32")
+    return s
+
+
+def test_crc32_matches_reference_implementation():
+    import binascii
+
+    from repro.core.codec import word_crc32
+
+    for vals in ([1.5, -2.25, 3e5], [0.0], list(range(50))):
+        v = np.asarray(vals, "<f4")
+        lo, hi = np.asarray(word_crc32(jnp.asarray(v)))
+        assert int(lo) | (int(hi) << 16) == binascii.crc32(v.tobytes())
+
+
+def test_crc32_guard_verifies_and_quarantines():
+    d, rep = crc_stream().decode_verified()
+    assert rep.ok, rep.summary()
+    np.testing.assert_allclose(d["l0/rms"], [1.5, 2.5])
+    # payload flip -> that record quarantined, the other intact
+    d, rep = crc_stream().with_bitflip(0).decode_verified()
+    assert rep.quarantined == ["l0/rms"] and "l1/rms" in d
+    # flip inside either CRC half -> quarantined too
+    for w in (3, 4):  # l0: payload 0-1, guard [seq, lo, hi] = 2-4
+        _, rep = crc_stream().with_bitflip(w).decode_verified()
+        assert rep.quarantined == ["l0/rms"], w
+
+
+def test_crc32_detects_multi_bit_burst():
+    # a 17-bit burst inside one word — the kind of damage a DMA glitch
+    # leaves; CRC-32 must flag it
+    bad = crc_stream().with_bitflip(1, bitmask=(1 << 17) - 1)
+    _, rep = bad.decode_verified()
+    assert rep.quarantined == ["l0/rms"]
+
+
+def test_default_guard_stays_two_words():
+    s = ProfileStream.create().append_guarded("a", "m", jnp.array([1.0]))
+    assert s.schema[-1].size == 2  # xor24 layout unchanged by the new mode
+
+
+def test_truncated_crc_guard_keeps_payload_unverified():
+    s = crc_stream()
+    # cut mid-guard: l0's payload arrived, only part of its guard did
+    d, rep = s.truncated(3).decode_verified()
+    assert rep.truncated and not rep.ok
+    assert rep.status["l0/rms"] == "unverified"
+    np.testing.assert_allclose(d["l0/rms"], [1.5, 2.5])
+    assert "l1/rms" in rep.missing
+
+
+def test_truncation_sweep_never_crashes_verified_decode():
+    s = crc_stream()
+    for n in range(s.n_words + 1):
+        d, rep = s.truncated(n).decode_verified()
+        assert rep.ok == (n == s.n_words)
+        for name, vals in d.items():
+            assert np.isfinite(vals).all(), (n, name)
+
+
+def test_interleaved_guard_algorithms_decode_positionally():
+    # mixed xor24/crc32 records in one stream: the decoder must key the
+    # verification off each guard label's size, not a global mode
+    s = ProfileStream.create()
+    s = s.append_guarded("a", "m", jnp.array([1.0]), algo="crc32")
+    s = s.append_guarded("b", "m", jnp.array([2.0]))            # xor24
+    s = s.append_guarded("c", "m", jnp.array([3.0]), algo="crc32")
+    d, rep = s.decode_verified()
+    assert rep.ok, rep.summary()
+    assert [s2.size for s2 in s.schema if s2.metric == "integrity"] == [3, 2, 3]
+    assert set(d) == {"a", "b", "c"}
+    # corruption in the middle xor24 record leaves both crc records intact
+    bad, rep = s.with_bitflip(4).decode_verified()
+    assert rep.quarantined == ["b"] and set(bad) == {"a", "c"}
+
+
+def test_interleaved_split_merge_with_crc_guards():
+    a, b = crc_stream().split(2)
+    b = b.append_guarded("branch/x", "m", jnp.array([4.0]))     # xor24
+    d, rep = ProfileStream.merge(a, b).decode_verified()
+    assert rep.ok, rep.summary()
+    assert set(d) == {"l0/rms", "l1/rms", "branch/x"}
+
+
+# --------------------------------------------------------------------- #
 # layer 4: supervision — watchdog, retry, degradation ladder
 # --------------------------------------------------------------------- #
 def test_retry_with_backoff_retries_then_succeeds():

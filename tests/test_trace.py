@@ -1,0 +1,281 @@
+"""repro.trace subsystem tests: timelines, attribution, sizing, export.
+
+Covers the acceptance loop end to end: a capacity-faulted campaign must
+rank the faulted FIFO first as root cause, the sizing recommendation fed
+back as ``initial_overrides`` must clear the deadlock with ZERO geometric
+ladder attempts, and the Perfetto export must validate and re-ingest
+losslessly.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import ProfileCollector, ProfileStream
+from repro.distributed.fault import Heartbeats, ProfilingSupervisor
+from repro.rinn import (
+    CapacityFault, FaultPlan, RinnConfig, ZCU102, compare, compile_graph,
+    diagnose, generate_rinn, run_sim, run_with_remediation,
+)
+from repro.trace import (
+    Channel, TraceStore, attribute_bottlenecks, diff_traces, from_perfetto,
+    recommend_capacities, text_report, to_perfetto, trace_pair, trace_run,
+    validate_chrome_trace,
+)
+
+CFG = RinnConfig(n_backbone=5, image_size=8, seed=4, density=0.4)
+FAULT_EDGE = ("clone_conv1", "merge3")
+FAULT_NAME = "->".join(FAULT_EDGE)
+
+
+@pytest.fixture(scope="module")
+def sim():
+    return compile_graph(generate_rinn(CFG), ZCU102)
+
+
+@pytest.fixture(scope="module")
+def fault_plan():
+    return FaultPlan(seed=1, capacities=(
+        CapacityFault(edge=FAULT_EDGE, capacity=2),))
+
+
+@pytest.fixture(scope="module")
+def healthy(sim):
+    return trace_run(sim, profiled=True, max_cycles=50_000)
+
+
+@pytest.fixture(scope="module")
+def faulted(sim, fault_plan):
+    return trace_run(sim, profiled=True, faults=fault_plan,
+                     max_cycles=50_000)
+
+
+# --------------------------------------------------------------------- #
+# traced runtime: same results, plus the time axis
+# --------------------------------------------------------------------- #
+def test_traced_run_matches_untraced(sim, healthy):
+    res, store = healthy
+    plain = run_sim(sim, profiled=True, max_cycles=50_000)
+    assert res.completed and plain.completed
+    assert res.cycles == plain.cycles
+    assert res.fifo_max == plain.fifo_max
+    # the timeline's whole-run peak is exactly the simulator's fifo_max
+    stats = store.stats_by_name()
+    for e, depth in plain.fifo_max.items():
+        assert stats["->".join(e)].peak == depth
+
+
+def test_trace_windows_cover_the_whole_run(healthy):
+    res, store = healthy
+    assert store.total_cycles == res.cycles
+    assert store.n_windows * store.window_cycles >= res.cycles
+
+
+def test_trace_pair_lanes_are_window_aligned(sim):
+    (r_ref, t_ref), (r_prof, t_prof) = trace_pair(sim, max_cycles=50_000)
+    assert r_ref.completed and r_prof.completed
+    assert t_ref.window_cycles == t_prof.window_cycles
+    assert [c.name for c in t_ref.channels] == [c.name for c in t_prof.channels]
+
+
+# --------------------------------------------------------------------- #
+# bottleneck attribution (the acceptance scenario)
+# --------------------------------------------------------------------- #
+def test_faulted_fifo_ranks_first_as_root_cause(sim, faulted):
+    res, store = faulted
+    assert not res.completed
+    report = attribute_bottlenecks(store, deadlock=diagnose(sim, res))
+    top = report.ranked[0]
+    assert top.name == FAULT_NAME
+    assert top.role == "root_cause"
+    assert report.deadlock_consistent, report.deadlock_missing
+    assert FAULT_NAME in report.saturated
+
+
+def test_healthy_run_has_no_root_causes(healthy):
+    res, store = healthy
+    report = attribute_bottlenecks(store)
+    assert not report.root_causes
+    assert report.deadlock_consistent is None  # no deadlock to cross-check
+
+
+# --------------------------------------------------------------------- #
+# sizing closes the loop: seeded remediation, zero ladder attempts
+# --------------------------------------------------------------------- #
+def test_sizing_map_clears_deadlock_without_ladder(sim, fault_plan, faulted):
+    _, store = faulted
+    cap_map = recommend_capacities(store, sim).capacity_map()
+    assert FAULT_EDGE in cap_map
+    res, attempts = run_with_remediation(
+        sim, profiled=True, max_cycles=50_000, faults=fault_plan,
+        initial_overrides=cap_map)
+    assert res.completed
+    assert attempts == []  # the geometric ladder was never invoked
+    # baseline without the seed needs the ladder — the seed is load-bearing
+    _, ladder = run_with_remediation(sim, profiled=True, max_cycles=50_000,
+                                     faults=fault_plan)
+    assert len(ladder) >= 1
+
+
+def test_shrink_advice_is_advisory_only(sim, healthy):
+    _, store = healthy
+    plan = recommend_capacities(store, sim)
+    assert plan.shrunk  # 4096-deep defaults vs tiny peaks
+    assert not plan.capacity_map()  # healthy run: nothing to grow
+    shrink_map = plan.capacity_map(include_shrink=True)
+    assert shrink_map and all(v >= 2 for v in shrink_map.values())
+
+
+# --------------------------------------------------------------------- #
+# Perfetto export: schema-valid, lossless round trip
+# --------------------------------------------------------------------- #
+def test_perfetto_export_validates(faulted):
+    _, store = faulted
+    obj = to_perfetto(store)
+    assert validate_chrome_trace(obj) == []
+    phases = {e["ph"] for e in obj["traceEvents"]}
+    assert {"M", "C", "X"} <= phases  # metadata, counters, stall spans
+
+
+def test_perfetto_roundtrip_is_lossless(faulted):
+    _, store = faulted
+    assert from_perfetto(to_perfetto(store)).equals(store)
+
+
+def test_perfetto_roundtrip_fractional_and_markers():
+    store = TraceStore(window_cycles=1, time_unit="steps")
+    store.record_step({"kv/occupancy": np.asarray([0.125, 0.375])},
+                      capacities={"kv/occupancy": 1})
+    store.add_marker("profiling: inline->shortcut", detail="overhead")
+    store.record_step({"kv/occupancy": np.asarray([1.0])})
+    assert from_perfetto(to_perfetto(store)).equals(store)
+
+
+def test_validator_catches_malformed_events():
+    bad = {"traceEvents": [
+        {"ph": "Z", "name": "x", "ts": 0},
+        {"ph": "C", "name": "y", "ts": -1},
+        {"ph": "X", "name": "z", "ts": 0},          # missing dur
+        "not-an-object",
+    ]}
+    errors = validate_chrome_trace(bad)
+    assert len(errors) == 4
+    assert validate_chrome_trace({"no": "events"}) != []
+
+
+def test_text_report_lists_channels(faulted):
+    _, store = faulted
+    rep = text_report(store, top=3)
+    assert FAULT_NAME in rep
+
+
+# --------------------------------------------------------------------- #
+# diffing and rebinning
+# --------------------------------------------------------------------- #
+def test_diff_flags_the_faulted_fifo_as_regression(healthy, faulted):
+    d = diff_traces(healthy[1], faulted[1])
+    names = {r.name for r in d.regressions()}
+    assert FAULT_NAME in names
+
+
+def test_diff_of_identical_traces_is_clean(healthy):
+    d = diff_traces(healthy[1], healthy[1])
+    assert d.regressions() == []
+    assert d.cycles_delta == 0
+
+
+def test_rebin_preserves_whole_trace_aggregates(healthy):
+    _, store = healthy
+    coarse = store.rebin(4)
+    assert coarse.n_windows == -(-store.n_windows // 4)
+    a, b = store.stats_by_name(), coarse.stats_by_name()
+    for name in a:
+        assert a[name].peak == b[name].peak
+        assert a[name].samples == b[name].samples
+        assert a[name].mean == pytest.approx(b[name].mean)
+
+
+# --------------------------------------------------------------------- #
+# collector tap and the cosim attachment
+# --------------------------------------------------------------------- #
+def test_collector_trace_tap_keeps_time_axis():
+    c = ProfileCollector()
+    store = c.attach_trace(capacities={"sig/occ": 4})
+    s = ProfileStream.create().append_guarded(
+        "sig/occ", "fifo_fullness", jnp.asarray([4.0, 0.0]))
+    c.ingest_verified(s)
+    c.ingest(s)
+    assert c.trace is store and store.n_windows == 2
+    st = store.stats_by_name()["sig/occ"]
+    assert st.peak == 4.0 and st.samples == 4
+    assert st.full_frac == 0.5 and st.empty_frac == 0.5
+
+
+def test_collector_without_tap_is_unchanged():
+    c = ProfileCollector()
+    s = ProfileStream.create().append_guarded(
+        "sig/occ", "fifo_fullness", jnp.asarray([1.0]))
+    c.ingest(s)
+    assert c.trace is None
+
+
+def test_compare_attaches_window_aligned_traces():
+    rep = compare(generate_rinn(CFG), ZCU102, trace=True)
+    assert rep.trace_ref is not None and rep.trace_prof is not None
+    assert rep.trace_ref.window_cycles == rep.trace_prof.window_cycles
+    stats = rep.trace_ref.stats_by_name()
+    for row in rep.rows:
+        assert stats["->".join(row.edge)].peak == row.cosim
+
+
+def test_compare_without_trace_has_none():
+    rep = compare(generate_rinn(CFG), ZCU102)
+    assert rep.trace_ref is None and rep.trace_prof is None
+
+
+# --------------------------------------------------------------------- #
+# store edge cases
+# --------------------------------------------------------------------- #
+def test_duplicate_channel_rejected():
+    with pytest.raises(ValueError):
+        TraceStore([Channel("a"), Channel("a")])
+
+
+def test_store_growth_keeps_float_columns():
+    store = TraceStore(window_cycles=1, time_unit="steps")
+    for i in range(20):  # force several amortized-doubling regrows
+        store.record_step({"s": np.asarray([0.5 + i])})
+    assert store.column("occ_max").dtype == np.float64
+    assert store.stats_by_name()["s"].peak == 19.5
+
+
+# --------------------------------------------------------------------- #
+# heartbeats feed the supervisor ladder (straggler -> degrade)
+# --------------------------------------------------------------------- #
+def test_supervisor_degrades_on_persistent_stragglers():
+    hb = Heartbeats(n_hosts=2, window=8, straggler_factor=2.0)
+    sup = ProfilingSupervisor(failure_threshold=2)
+    for _ in range(6):
+        hb.record(0, 0.1)
+        hb.record(1, 0.1)
+    assert sup.observe_heartbeats(hb) == "inline"  # healthy fleet
+    hb.record(1, 1.0)
+    sup.observe_heartbeats(hb)
+    sup.step_ok()  # a healthy ingest must NOT clear the straggler streak
+    hb.record(1, 1.0)
+    assert sup.observe_heartbeats(hb) == "shortcut"
+    assert sup.events and "straggler" in sup.events[0].reason
+
+
+def test_healthy_heartbeats_reset_straggler_streak():
+    hb = Heartbeats(n_hosts=1, window=8, straggler_factor=2.0)
+    sup = ProfilingSupervisor(failure_threshold=2)
+    for _ in range(6):
+        hb.record(0, 0.1)
+    hb.record(0, 1.0)
+    sup.observe_heartbeats(hb)       # strike 1
+    hb.record(0, 0.1)
+    sup.observe_heartbeats(hb)       # healthy heartbeat clears the streak
+    hb.record(0, 1.0)
+    assert sup.observe_heartbeats(hb) == "inline"  # strike 1 again, not 2
+    assert not sup.events
