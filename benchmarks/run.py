@@ -11,7 +11,7 @@ import time
 from pathlib import Path
 
 BENCHES = ("fig3", "fig4", "table1", "fig5", "roofline", "perf_stream",
-           "trace_smoke")
+           "trace_smoke", "analysis_smoke")
 
 
 def main() -> None:
@@ -35,6 +35,8 @@ def main() -> None:
             from benchmarks import perf_stream as mod
         elif name == "trace_smoke":
             from benchmarks import trace_smoke as mod
+        elif name == "analysis_smoke":
+            from benchmarks import analysis_smoke as mod
         else:
             raise SystemExit(f"unknown benchmark {name!r}; have {BENCHES}")
         res = mod.run()

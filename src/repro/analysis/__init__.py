@@ -1,3 +1,11 @@
 from .hlo import HloCost, analyze_hlo, parse_computations
 from .roofline import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16, RooflineTerms,
                        from_artifact, model_flops)
+from .dataflow import (VERDICT_DEADLOCK, VERDICT_SAFE, VERDICT_UNKNOWN,
+                       EdgeBound, NodeSchedule, StaticAnalysis,
+                       ThroughputBound, analyze_graph, analyze_sim,
+                       effective_capacities, static_sizing_plan)
+from .lint import (ERROR, INFO, RULES, SEVERITIES, WARN, Finding,
+                   LintContext, LintReport, Rule, make_finding, rule,
+                   run_lint)
+from .grade import EdgeOutcome, PredictionGrade, grade_saturation

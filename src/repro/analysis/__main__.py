@@ -1,0 +1,127 @@
+"""``python -m repro.analysis`` — static analysis + lint over RINN designs.
+
+Runs the static dataflow pass and the full lint rule catalog on a suite of
+generated designs (the fig5 pattern sweep plus the benchmark smoke
+configs), prints per-design reports, and exits non-zero when any ERROR
+finding fires — the CI ``analysis-gate`` entry point.
+
+``--json`` emits the machine-readable findings document on stdout;
+``--out`` writes it to a file (the CI artifact) while keeping the text
+report on stdout.  ``--demo-fault`` appends the known capacity-fault
+deadlock scenario so the ERROR path is demonstrable on demand.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Tuple
+
+from repro.rinn import PYNQ_Z2, ZCU102, RinnConfig, generate_rinn
+from repro.rinn.streamsim import CapacityFault, FaultPlan
+
+from .dataflow import analyze_graph, effective_capacities
+from .lint import LintReport, run_lint
+
+BOARDS = {"zcu102": ZCU102, "pynq_z2": PYNQ_Z2}
+
+
+def suite_configs(demo_fault: bool) -> List[Tuple[str, RinnConfig,
+                                                  Optional[FaultPlan]]]:
+    """The designs the gate lints: deterministic, healthy by default."""
+    entries: List[Tuple[str, RinnConfig, Optional[FaultPlan]]] = [
+        ("conv/density/s0", RinnConfig(image_size=8), None),
+        ("dense/density/s0", RinnConfig(family="dense"), None),
+    ]
+    for pat in ("short_skip", "long_skip", "ends_only"):
+        for seed in range(3):
+            entries.append((
+                f"conv/{pat}/s{seed}",
+                RinnConfig(n_backbone=8, pattern=pat, image_size=8,
+                           seed=seed), None))
+    if demo_fault:
+        # the trace_smoke deadlock: a 2-word FIFO on a reconvergent branch
+        entries.append((
+            "conv/density/s4+capfault",
+            RinnConfig(n_backbone=5, image_size=8, seed=4, density=0.4),
+            FaultPlan(seed=1, capacities=(
+                CapacityFault(edge=("clone_conv1", "merge3"),
+                              capacity=2),))))
+    return entries
+
+
+def run_suite(board, *, demo_fault: bool = False,
+              rules: Optional[List[str]] = None) -> Tuple[List[Dict], bool]:
+    """Lint every suite design; returns (per-design docs, any-error)."""
+    docs: List[Dict] = []
+    any_error = False
+    entries = suite_configs(demo_fault)
+    graphs = [generate_rinn(cfg) for _, cfg, _ in entries]
+    for (name, cfg, faults), graph in zip(entries, graphs):
+        analysis = analyze_graph(graph, board)
+        report: LintReport = run_lint(graph, timing=board, faults=faults,
+                                      sweep=graphs, rules=rules)
+        any_error |= not report.ok
+        bounds = analysis.capacity_lower_bounds()
+        docs.append({
+            "design": name,
+            "predicted_cycles": analysis.predicted_cycles,
+            "deepest_bound": max(bounds.values(), default=0),
+            "verdict": analysis.deadlock_verdict(
+                effective_capacities(analysis.sim, faults)),
+            "ok": report.ok,
+            "counts": {s: len(f) for s, f in report.by_severity().items()},
+            "findings": [f.to_dict() for f in report.findings],
+            "ran": report.ran, "skipped": report.skipped,
+        })
+    return docs, any_error
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static dataflow analysis + lint gate for RINN designs")
+    ap.add_argument("--board", choices=sorted(BOARDS), default="zcu102")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the findings document as JSON on stdout")
+    ap.add_argument("--out", metavar="FILE",
+                    help="also write the JSON findings document to FILE")
+    ap.add_argument("--rules", metavar="IDS",
+                    help="comma-separated rule ids to restrict the pass")
+    ap.add_argument("--demo-fault", action="store_true",
+                    help="include the known capacity-fault deadlock design "
+                         "(exercises the ERROR exit path)")
+    args = ap.parse_args(argv)
+
+    rules = args.rules.split(",") if args.rules else None
+    docs, any_error = run_suite(BOARDS[args.board],
+                                demo_fault=args.demo_fault, rules=rules)
+    doc = {"ok": not any_error, "board": args.board, "designs": docs,
+           "totals": {s: sum(d["counts"][s] for d in docs)
+                      for s in ("ERROR", "WARN", "INFO")}}
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump(doc, fh, indent=2)
+    if args.json:
+        json.dump(doc, sys.stdout, indent=2)
+        print()
+    else:
+        for d in docs:
+            status = "ok" if d["ok"] else "ERROR"
+            print(f"{d['design']:28s} {status:5s} verdict={d['verdict']:8s} "
+                  f"cycles={d['predicted_cycles']:<6d} "
+                  f"max_lb={d['deepest_bound']:<3d} "
+                  f"E/W/I {d['counts']['ERROR']}/{d['counts']['WARN']}/"
+                  f"{d['counts']['INFO']}")
+            for f in d["findings"]:
+                hint = f"  [fix: {f['hint']}]" if f.get("hint") else ""
+                print(f"  {f['severity']:5s} {f['rule']} {f['locus']}: "
+                      f"{f['message']}{hint}")
+        t = doc["totals"]
+        print(f"-- {len(docs)} design(s): {t['ERROR']} error / "
+              f"{t['WARN']} warn / {t['INFO']} info")
+    return 1 if any_error else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,469 @@
+"""Static dataflow analysis of RINN streaming graphs — no simulation.
+
+FIFOAdvisor (arXiv 2510.20981) observes that FIFO depths and
+deadlock-freedom of a streaming dataflow design are largely decidable
+*statically*: the graph, the per-actor initiation intervals, and the
+pipeline-fill latencies determine the schedule before a single cycle is
+simulated.  This module reconstructs that schedule analytically from the
+arrays :func:`repro.rinn.streamsim.compile_graph` already produces.
+
+The machine's semantics (see :func:`repro.rinn.batchsim._simulate`) are
+deterministic and beat-level, so one topological pass yields the exact
+**unbounded schedule** — the cycle at which every actor consumes and
+produces each beat, assuming no FIFO ever exerts backpressure:
+
+  * a source emits beat ``k`` at cycle ``k * source_ii``;
+  * an actor's ``j``-th consume fires at
+    ``C(j) = max(max_p P_p(j) + 1,  C(j-1) + ii)`` — the later of its
+    slowest input's ``j``-th arrival and its own initiation interval;
+  * its ``k``-th produce fires at
+    ``P(k) = max(C(q(k)) + extra_lat,  P(k-1) + 1)`` where ``q(k)`` is the
+    consume firing that raises the pipeline allowance past ``k`` (burst
+    actors have ``fill = total_in``, so ``q(k) = total_in - 1``: the whole
+    input drains first).
+
+From the schedule fall three static results, each the analytical twin of a
+dynamic measurement elsewhere in the repo:
+
+  * **capacity lower bounds** — the peak backlog ``max_t |pushed <= t| -
+    |popped <= t|`` of every edge is the latency slack across its
+    split/merge cut expressed in beats.  It is simultaneously a *lower*
+    bound (any smaller FIFO perturbs the ideal schedule) and, taken across
+    all edges, a *sufficient* sizing: if every capacity meets its bound, no
+    push is ever blocked, so the bounded run replays the unbounded schedule
+    beat-for-beat and completes (the twin of
+    :func:`repro.trace.recommend_capacities`);
+  * **deadlock verdicts** — ``safe`` when all capacities meet their bounds
+    (provably deadlock-free, by the replay argument), ``deadlock`` when a
+    fork/merge cut is provably starved (see :func:`deadlock_verdict`),
+    ``unknown`` otherwise;
+  * **throughput bound** — the predicted completion cycle and the actor
+    whose busy span dominates it, with predicted-saturating edges ranked
+    like :func:`repro.trace.attribute_bottlenecks`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.rinn.streamsim import CompiledSim, FaultPlan
+
+Edge = Tuple[str, str]
+
+VERDICT_SAFE = "safe"
+VERDICT_DEADLOCK = "deadlock"
+VERDICT_UNKNOWN = "unknown"
+
+
+# --------------------------------------------------------------------- #
+# the unbounded schedule
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class NodeSchedule:
+    """One actor's beat-level event times in the unbounded schedule."""
+
+    node: str
+    consume: np.ndarray   # [total_in]  cycle of each consume firing
+    produce: np.ndarray   # [total_out] cycle of each produce firing
+
+    @property
+    def start(self) -> int:
+        if self.consume.size:
+            return int(self.consume[0])
+        return int(self.produce[0]) if self.produce.size else 0
+
+    @property
+    def finish(self) -> int:
+        return int(self.produce[-1]) if self.produce.size else self.start
+
+    @property
+    def busy_span(self) -> int:
+        return self.finish - self.start + 1
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeBound:
+    """Static occupancy profile of one FIFO under the unbounded schedule.
+
+    ``peak_backlog`` is the deepest end-of-cycle occupancy; ``capacity_lb``
+    is the minimum capacity that replays the schedule untouched.  They can
+    differ by one: the machine checks output space against *start*-of-cycle
+    occupancy, so a cycle that pops and pushes simultaneously at the peak
+    needs one word of headroom beyond the backlog itself.
+    """
+
+    edge: Edge
+    capacity_lb: int      # min capacity that keeps the unbounded schedule
+    peak_backlog: int     # deepest end-of-cycle occupancy
+    peak_cycle: int       # first cycle the backlog reaches its peak
+    total_beats: int      # beats that transit the edge
+    demand_bound: int     # producer's total beat count (worst-case sizing)
+
+    @property
+    def slack_beats(self) -> int:
+        """Beats of split/merge latency slack the FIFO must absorb."""
+        return self.peak_backlog
+
+
+def _consume_times(arrivals: np.ndarray, ii: int) -> np.ndarray:
+    """C(j) = max(arrival(j), C(j-1) + ii), vectorized via prefix max.
+
+    ``C(j) >= arrival(j)`` and ``C(j) >= C(j-1) + ii`` unroll to
+    ``C(j) = max_{i <= j} (arrival(i) + (j - i) * ii)`` — a prefix max of
+    ``arrival(i) - i * ii`` shifted back by ``j * ii``.
+    """
+    if not arrivals.size:
+        return arrivals
+    j = np.arange(arrivals.size, dtype=np.int64)
+    return np.maximum.accumulate(arrivals - j * ii) + j * ii
+
+
+def _produce_times(enable: np.ndarray) -> np.ndarray:
+    """P(k) = max(enable(k), P(k-1) + 1) — same prefix-max trick, ii = 1."""
+    return _consume_times(enable, 1)
+
+
+def _allowance_index(sim: CompiledSim, i: int) -> np.ndarray:
+    """q(k): index of the consume firing that raises ``allowed`` past k.
+
+    Mirrors the simulator's pipeline-allowance model: after consume firing
+    ``c`` (0-indexed, ``consumed_next = c + 1``), a 1:1 actor may produce
+    ``c + 1 - fill`` beats, a rate changer ``((c + 1 - fill) * out) // in``,
+    and a finished actor (``c = total_in - 1``) its full ``total_out``.
+    """
+    tin, tout = int(sim.total_in[i]), int(sim.total_out[i])
+    fill = int(sim.fill[i])
+    k = np.arange(tout, dtype=np.int64)
+    if tin == tout:
+        q = k + fill
+    else:
+        # smallest c with ((c + 1 - fill) * tout) // tin >= k + 1
+        q = fill + np.ceil((k + 1) * tin / tout).astype(np.int64) - 1
+    return np.minimum(q, tin - 1)
+
+
+def compute_schedules(sim: CompiledSim) -> Dict[str, NodeSchedule]:
+    """One topological pass over the compiled machine -> exact unbounded
+    beat schedules (``sim.node_ids`` is already in topo order)."""
+    node_of = {nid: i for i, nid in enumerate(sim.node_ids)}
+    preds: Dict[str, List[str]] = {n: [] for n in sim.node_ids}
+    for (s, d) in sim.edge_list:
+        preds[d].append(s)
+
+    out: Dict[str, NodeSchedule] = {}
+    for nid in sim.node_ids:
+        i = node_of[nid]
+        tin, tout = int(sim.total_in[i]), int(sim.total_out[i])
+        if sim.is_source[i]:
+            produce = np.arange(tout, dtype=np.int64) * int(sim.source_ii)
+            out[nid] = NodeSchedule(node=nid,
+                                    consume=np.zeros(0, np.int64),
+                                    produce=produce)
+            continue
+        # arrival(j): the j-th beat of every input is in the FIFO (pushes
+        # land at end-of-cycle, so it is consumable one cycle later)
+        arrivals = np.zeros(tin, np.int64)
+        for p in preds[nid]:
+            arrivals = np.maximum(arrivals, out[p].produce[:tin] + 1)
+        consume = _consume_times(arrivals, int(sim.ii[i]))
+        enable = consume[_allowance_index(sim, i)] + int(sim.extra_lat[i])
+        produce = _produce_times(enable)
+        out[nid] = NodeSchedule(node=nid, consume=consume, produce=produce)
+    return out
+
+
+def _edge_profile(push: np.ndarray,
+                  pop: np.ndarray) -> Tuple[int, int, int]:
+    """``(capacity_lb, peak_backlog, peak_cycle)`` of one FIFO.
+
+    ``push``/``pop`` are the sorted cycles at which beats land and leave;
+    simultaneous push+pop nets out (the machine applies both at
+    end-of-cycle).  A push at cycle ``t`` is admitted iff the *end of
+    cycle t-1* occupancy is below capacity, so the schedule-preserving
+    minimum is ``max over pushes of (occupancy before the push) + 1``.
+    """
+    if not push.size:
+        return 1, 0, 0
+    times = np.unique(np.concatenate([push, pop]))
+    pushed = np.searchsorted(push, times, side="right")
+    popped = np.searchsorted(pop, times, side="right")
+    occ = pushed - popped
+    k = int(np.argmax(occ))
+    idx = np.searchsorted(times, push)
+    occ_before = np.where(idx > 0, occ[np.maximum(idx - 1, 0)], 0)
+    return int(occ_before.max()) + 1, int(occ[k]), int(times[k])
+
+
+@dataclasses.dataclass(frozen=True)
+class ThroughputBound:
+    """Static completion-time bound and its dominating actor."""
+
+    predicted_cycles: int
+    bottleneck_node: str
+    bottleneck_span: int          # the bottleneck actor's busy span
+    node_spans: Dict[str, int]    # busy span per actor
+
+    def summary(self) -> str:
+        return (f"predicted >= {self.predicted_cycles} cycles; "
+                f"bottleneck actor {self.bottleneck_node} "
+                f"(busy {self.bottleneck_span} cycles)")
+
+
+@dataclasses.dataclass
+class StaticAnalysis:
+    """Everything the dataflow pass derives from one compiled machine."""
+
+    sim: CompiledSim
+    schedules: Dict[str, NodeSchedule]
+    bounds: Dict[Edge, EdgeBound]
+    predicted_cycles: int
+
+    # ------------------------------------------------------------------ #
+    def capacity_lower_bounds(self) -> Dict[Edge, int]:
+        return {e: b.capacity_lb for e, b in self.bounds.items()}
+
+    def throughput(self) -> ThroughputBound:
+        spans = {n: s.busy_span for n, s in self.schedules.items()
+                 if not self.sim.is_source[self.sim.node_ids.index(n)]}
+        worst = max(spans, key=lambda n: spans[n])
+        return ThroughputBound(
+            predicted_cycles=self.predicted_cycles, bottleneck_node=worst,
+            bottleneck_span=spans[worst], node_spans=spans)
+
+    def predicted_saturated(
+            self, capacities: Dict[Edge, int]) -> List[EdgeBound]:
+        """Edges whose static backlog reaches their capacity, ranked by how
+        far past capacity the unbounded schedule pushes them — the static
+        twin of :func:`repro.trace.attribute_bottlenecks`'s saturated set."""
+        hits = [b for e, b in self.bounds.items()
+                if b.peak_backlog >= max(1, capacities.get(e, 0))]
+        return sorted(hits, key=lambda b: (
+            -(b.peak_backlog / max(1, capacities.get(b.edge, 1))),
+            b.peak_cycle, b.edge))
+
+    # ------------------------------------------------------------------ #
+    def deadlock_verdict(self, capacities: Dict[Edge, int]) -> str:
+        """Three-valued deadlock-freedom verdict for one capacity config.
+
+        ``safe``     — every capacity meets its static bound, so no push is
+                       ever blocked: the run replays the unbounded schedule
+                       and provably completes.
+        ``deadlock`` — some merge is provably starved before its first
+                       firing (see :func:`_first_fire_deadlock`).
+        ``unknown``  — undersized FIFOs exist but neither proof applies.
+        """
+        if all(capacities.get(e, 0) >= b.capacity_lb
+               for e, b in self.bounds.items()):
+            return VERDICT_SAFE
+        if _first_fire_deadlock(self.sim, capacities):
+            return VERDICT_DEADLOCK
+        return VERDICT_UNKNOWN
+
+
+def analyze_sim(sim: CompiledSim) -> StaticAnalysis:
+    """The dataflow pass: schedules, per-edge bounds, completion bound."""
+    schedules = compute_schedules(sim)
+    node_of = {nid: i for i, nid in enumerate(sim.node_ids)}
+    bounds: Dict[Edge, EdgeBound] = {}
+    for (s, d) in sim.edge_list:
+        di = node_of[d]
+        beats = int(sim.total_in[di])
+        push = schedules[s].produce[:beats]
+        pop = schedules[d].consume
+        lb, peak, cycle = _edge_profile(push, pop)
+        bounds[(s, d)] = EdgeBound(
+            edge=(s, d), capacity_lb=lb, peak_backlog=peak, peak_cycle=cycle,
+            total_beats=beats,
+            demand_bound=max(2, int(sim.total_out[node_of[s]])))
+    cycles = 1 + max((sch.finish for sch in schedules.values()), default=0)
+    return StaticAnalysis(sim=sim, schedules=schedules, bounds=bounds,
+                          predicted_cycles=cycles)
+
+
+def analyze_graph(graph, timing) -> StaticAnalysis:
+    """Convenience: compile then analyze (no simulation anywhere)."""
+    from repro.rinn.streamsim import compile_graph
+
+    return analyze_sim(compile_graph(graph, timing))
+
+
+# --------------------------------------------------------------------- #
+# capacity configs and the guaranteed-deadlock cut
+# --------------------------------------------------------------------- #
+def effective_capacities(
+    sim: CompiledSim, faults: Optional[FaultPlan] = None,
+    overrides: Optional[Dict[Edge, int]] = None,
+) -> Dict[Edge, int]:
+    """Per-edge capacities after plan faults and remediation overrides,
+    in the simulator's precedence order (overrides win)."""
+    cap = {e: sim.capacity for e in sim.edge_list}
+    for cf in (faults.capacities if faults else ()):
+        cap[cf.edge] = cf.capacity
+    cap.update(overrides or {})
+    return cap
+
+
+_INF_NEED = 1 << 60
+
+
+def _first_beats_needed(sim: CompiledSim, node_of: Dict[str, int],
+                        preds: Dict[str, List[str]],
+                        src: str, dst: str) -> int:
+    """Fewest beats ``src`` must produce for one beat to *arrive at*
+    ``dst``, assuming everything else flows freely.  An optimistic lower
+    bound, so it is usable only on the starved side of a deadlock proof.
+
+    Walking back from ``dst``: producing ``b`` beats costs an actor
+    ``q(b-1) + 1`` consume beats from each input (its pipeline allowance
+    inverted); a burst actor needs its whole input before the first beat.
+    """
+    best: Dict[str, int] = {p: 1 for p in preds[dst]}
+    # node_ids is topo order; walk it backwards
+    for nid in reversed(sim.node_ids):
+        if nid not in best or nid == src or nid == dst:
+            continue
+        need_out = min(best[nid], int(sim.total_out[node_of[nid]]))
+        i = node_of[nid]
+        if int(sim.total_in[i]) == 0:
+            continue
+        q = _allowance_index(sim, i)
+        need_in = int(q[need_out - 1]) + 1 if len(q) else _INF_NEED
+        for p in preds[nid]:
+            best[p] = min(best.get(p, _INF_NEED), need_in)
+    return best.get(src, _INF_NEED)
+
+
+def _first_fire_deadlock(sim: CompiledSim,
+                         capacities: Dict[Edge, int]) -> bool:
+    """Provable first-firing starvation of some merge actor.
+
+    A merge consumes from *all* inputs atomically, so before its first
+    firing no in-edge is ever popped.  For a fork ``f`` feeding the merge
+    through two edge-disjoint branches, every beat ``f`` produces lands on
+    *all* of its out-edges simultaneously — so ``f`` stalls as soon as any
+    branch is full.  Before the merge fires, a branch entered through edge
+    ``e = (f, v)`` absorbs at most ``cap(e)`` beats (``v`` is the merge:
+    zero pops) or ``cap(e) + total_in(v)`` beats (``v`` consumes freely but
+    its pushes are someone else's problem — a sound over-approximation).
+    If the *other* branch needs more beats of ``f`` than the blocked branch
+    can absorb before delivering its first beat to the merge, the merge can
+    never fire: guaranteed deadlock.
+    """
+    node_of = {nid: i for i, nid in enumerate(sim.node_ids)}
+    preds: Dict[str, List[str]] = {n: [] for n in sim.node_ids}
+    succs: Dict[str, List[str]] = {n: [] for n in sim.node_ids}
+    for (s, d) in sim.edge_list:
+        preds[d].append(s)
+        succs[s].append(d)
+
+    # ancestors per node (graphs are tiny; sets are fine)
+    anc: Dict[str, set] = {}
+    for nid in sim.node_ids:
+        a = set()
+        for p in preds[nid]:
+            a.add(p)
+            a |= anc[p]
+        anc[nid] = a
+
+    merges = [n for n in sim.node_ids if len(preds[n]) >= 2]
+    forks = [n for n in sim.node_ids if len(succs[n]) >= 2]
+    for m in merges:
+        for f in forks:
+            if f not in anc[m] and f != m:
+                continue
+            # branches of f that reach m: absorption budget of each
+            budgets: Dict[str, int] = {}
+            for v in succs[f]:
+                if v != m and m not in _reach(succs, v):
+                    continue
+                cap = capacities.get((f, v), sim.capacity)
+                budgets[v] = cap if v == m else (
+                    cap + int(sim.total_in[node_of[v]]))
+            if len(budgets) < 2:
+                continue
+            stall_at = min(budgets.values())  # f stalls once ANY branch fills
+            for v in budgets:
+                # can branch v still deliver a first beat once f stalls?
+                need = (1 if v == m else
+                        _first_beats_through(sim, node_of, preds, v, m))
+                if need > stall_at:
+                    return True
+    return False
+
+
+def _reach(succs: Dict[str, List[str]], start: str) -> set:
+    seen, frontier = set(), [start]
+    while frontier:
+        n = frontier.pop()
+        if n in seen:
+            continue
+        seen.add(n)
+        frontier.extend(succs[n])
+    return seen
+
+
+def _first_beats_through(sim: CompiledSim, node_of: Dict[str, int],
+                         preds: Dict[str, List[str]],
+                         via: str, dst: str) -> int:
+    """Fewest beats ``via`` must *receive* so one beat reaches ``dst``
+    through its sub-DAG (optimistic): the produce requirement at ``via``
+    from :func:`_first_beats_needed`, run through ``via``'s own inverted
+    pipeline allowance."""
+    need_at_via = _first_beats_needed(sim, node_of, preds, via, dst)
+    i = node_of[via]
+    if int(sim.total_in[i]) == 0 or need_at_via >= _INF_NEED:
+        return _INF_NEED
+    q = _allowance_index(sim, i)
+    if not len(q):
+        return _INF_NEED
+    need_at_via = min(need_at_via, len(q))
+    return int(q[need_at_via - 1]) + 1
+
+
+# --------------------------------------------------------------------- #
+# SizingPlan bridge — static bounds feeding the remediation loop
+# --------------------------------------------------------------------- #
+def static_sizing_plan(
+    analysis: StaticAnalysis, *,
+    faults: Optional[FaultPlan] = None,
+    overrides: Optional[Dict[Edge, int]] = None,
+    shrink: bool = True, overprovision_factor: int = 4,
+) -> "SizingPlan":
+    """A :class:`repro.trace.SizingPlan` derived purely from static bounds.
+
+    Edges whose configured capacity falls below their static bound get a
+    ``grow`` to exactly the bound (the minimum that preserves the unbounded
+    schedule — by the replay argument the seeded run then completes, so
+    ``plan.capacity_map()`` fed to
+    :func:`repro.rinn.cosim.run_with_remediation` as ``initial_overrides``
+    clears capacity deadlocks with zero ladder attempts and no prior
+    trace).  Generously over-provisioned edges get a ``shrink`` advisory
+    down to their bound (+1 headroom), mirroring
+    :func:`repro.trace.recommend_capacities`.
+    """
+    from repro.trace.sizing import GROW, KEEP, SHRINK, SizingAdvice, SizingPlan
+
+    caps = effective_capacities(analysis.sim, faults, overrides)
+    advice: List[SizingAdvice] = []
+    for e, b in analysis.bounds.items():
+        cap = caps[e]
+        if cap < b.capacity_lb:
+            advice.append(SizingAdvice(
+                edge=e, current=cap, recommended=b.capacity_lb, action=GROW,
+                reason=f"static bound {b.capacity_lb} beats "
+                       f"(peak backlog {b.peak_backlog} at cycle "
+                       f"{b.peak_cycle})"))
+        elif shrink and cap >= overprovision_factor * b.capacity_lb + 1:
+            advice.append(SizingAdvice(
+                edge=e, current=cap, recommended=b.capacity_lb,
+                action=SHRINK,
+                reason=f"static peak backlog only {b.peak_backlog}; "
+                       f"{b.capacity_lb} words preserve the schedule"))
+        else:
+            advice.append(SizingAdvice(
+                edge=e, current=cap, recommended=cap, action=KEEP,
+                reason="within static bound"))
+    return SizingPlan(advice=advice)

@@ -1,0 +1,221 @@
+"""Lint framework for RINN graphs — rule registry, findings, severities.
+
+RealProbe (arXiv 2504.03879) argues for lightweight always-on checks that
+catch design problems before a run is ever launched.  This module is the
+registry half: rules live in :mod:`repro.analysis.rules`, register
+themselves with :func:`rule`, and :func:`run_lint` evaluates every
+(applicable) rule against a :class:`LintContext` built from whatever the
+caller has in hand — at minimum a graph, optionally a timing profile, a
+fault plan, remediation overrides, and a profile stream.
+
+Findings are structured records (rule id, severity, node/edge locus,
+message, fix-it hint) so they can be attached to a
+:class:`~repro.rinn.cosim.CosimReport`, serialized to JSON for the CI
+``analysis-gate``, or printed as text by ``python -m repro.analysis``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Callable, Dict, List, Optional, Tuple
+
+Edge = Tuple[str, str]
+
+ERROR = "ERROR"
+WARN = "WARN"
+INFO = "INFO"
+
+_SEV_RANK = {ERROR: 0, WARN: 1, INFO: 2}
+SEVERITIES = (ERROR, WARN, INFO)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One lint hit, anchored to a node or an edge of the graph."""
+
+    rule: str                     # e.g. "RINN003"
+    severity: str                 # ERROR | WARN | INFO
+    message: str
+    node: Optional[str] = None
+    edge: Optional[Edge] = None
+    hint: str = ""                # fix-it suggestion
+
+    @property
+    def locus(self) -> str:
+        if self.edge is not None:
+            return "->".join(self.edge)
+        return self.node or "<graph>"
+
+    def to_dict(self) -> Dict:
+        d = {"rule": self.rule, "severity": self.severity,
+             "locus": self.locus, "message": self.message}
+        if self.hint:
+            d["hint"] = self.hint
+        return d
+
+    def __str__(self) -> str:
+        line = f"{self.severity:5s} {self.rule} {self.locus}: {self.message}"
+        return line + (f"  [fix: {self.hint}]" if self.hint else "")
+
+
+@dataclasses.dataclass
+class LintContext:
+    """Everything a rule may inspect.  Only ``graph`` is mandatory; rules
+    requiring more declare it via ``needs`` and are skipped when the
+    context cannot supply it."""
+
+    graph: "RinnGraph"
+    timing: Optional["TimingProfile"] = None
+    faults: Optional["FaultPlan"] = None
+    overrides: Optional[Dict[Edge, int]] = None
+    stream: Optional["ProfileStream"] = None
+    # sweep context: sibling configs a shape-bucket rule can compare against
+    sweep: Optional[List["RinnGraph"]] = None
+
+    _sim: Optional[object] = dataclasses.field(default=None, repr=False)
+    _analysis: Optional[object] = dataclasses.field(default=None, repr=False)
+
+    @property
+    def sim(self):
+        """The compiled machine, built on first use (needs ``timing``)."""
+        if self._sim is None:
+            from repro.rinn.streamsim import compile_graph
+
+            self._sim = compile_graph(self.graph, self.timing)
+        return self._sim
+
+    @property
+    def analysis(self):
+        """The static dataflow analysis, computed on first use."""
+        if self._analysis is None:
+            from .dataflow import analyze_sim
+
+            self._analysis = analyze_sim(self.sim)
+        return self._analysis
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    severity: str
+    title: str
+    needs: Tuple[str, ...]        # context fields that must be non-None
+    check: Callable[[LintContext], List[Finding]]
+
+    def applicable(self, ctx: LintContext) -> bool:
+        return all(getattr(ctx, n) is not None for n in self.needs)
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def rule(id: str, severity: str, title: str, *, needs: Tuple[str, ...] = ()):
+    """Register a lint rule.  The decorated function receives the
+    :class:`LintContext` and yields/returns :class:`Finding`s; ``severity``
+    is the default each finding inherits unless it sets its own."""
+    if severity not in SEVERITIES:
+        raise ValueError(f"severity must be one of {SEVERITIES}")
+    if id in RULES:
+        raise ValueError(f"duplicate rule id {id!r}")
+
+    def deco(fn):
+        def check(ctx: LintContext) -> List[Finding]:
+            out = []
+            for f in (fn(ctx) or ()):
+                if f.severity not in SEVERITIES:
+                    raise ValueError(
+                        f"rule {id} emitted bad severity {f.severity!r}")
+                out.append(f)
+            return out
+
+        RULES[id] = Rule(id=id, severity=severity, title=title,
+                         needs=tuple(needs), check=check)
+        return fn
+
+    return deco
+
+
+def make_finding(rule_id: str, message: str, *, node=None, edge=None,
+                 hint: str = "", severity: Optional[str] = None) -> Finding:
+    """Finding constructor that defaults the severity from the registry."""
+    sev = severity or RULES[rule_id].severity
+    return Finding(rule=rule_id, severity=sev, message=message,
+                   node=node, edge=edge, hint=hint)
+
+
+@dataclasses.dataclass
+class LintReport:
+    """All findings of one lint pass, plus which rules ran vs skipped."""
+
+    findings: List[Finding]
+    ran: List[str]
+    skipped: List[str]            # inapplicable (missing context)
+
+    @property
+    def errors(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == ERROR]
+
+    @property
+    def warnings(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == WARN]
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors
+
+    def by_severity(self) -> Dict[str, List[Finding]]:
+        out: Dict[str, List[Finding]] = {s: [] for s in SEVERITIES}
+        for f in self.findings:
+            out[f.severity].append(f)
+        return out
+
+    def summary(self) -> str:
+        by = self.by_severity()
+        lines = [f"# lint — {len(self.findings)} finding(s): "
+                 f"{len(by[ERROR])} error / {len(by[WARN])} warn / "
+                 f"{len(by[INFO])} info "
+                 f"({len(self.ran)} rule(s) ran, {len(self.skipped)} "
+                 f"skipped)"]
+        for f in sorted(self.findings,
+                        key=lambda f: (_SEV_RANK[f.severity], f.rule,
+                                       f.locus)):
+            lines.append(f"  {f}")
+        return "\n".join(lines)
+
+    def to_json(self, **kw) -> str:
+        return json.dumps({
+            "ok": self.ok,
+            "counts": {s: len(fs) for s, fs in self.by_severity().items()},
+            "findings": [f.to_dict() for f in self.findings],
+            "ran": self.ran, "skipped": self.skipped,
+        }, **kw)
+
+    def __str__(self) -> str:
+        return self.summary()
+
+
+def run_lint(graph, *, timing=None, faults=None, overrides=None,
+             stream=None, sweep=None,
+             rules: Optional[List[str]] = None) -> LintReport:
+    """Evaluate every registered (applicable) rule against one design.
+
+    ``rules`` restricts the pass to specific rule ids.  Rules whose
+    ``needs`` the context cannot satisfy are recorded as skipped, not
+    errors — linting a bare graph is always possible.
+    """
+    from . import rules as _rules  # noqa: F401  (registers built-in rules)
+
+    ctx = LintContext(graph=graph, timing=timing, faults=faults,
+                      overrides=overrides, stream=stream, sweep=sweep)
+    wanted = rules or sorted(RULES)
+    findings: List[Finding] = []
+    ran: List[str] = []
+    skipped: List[str] = []
+    for rid in wanted:
+        r = RULES[rid]
+        if not r.applicable(ctx):
+            skipped.append(rid)
+            continue
+        findings.extend(r.check(ctx))
+        ran.append(rid)
+    return LintReport(findings=findings, ran=ran, skipped=skipped)

@@ -1,0 +1,7 @@
+"""Built-in lint rules.  Importing this package registers every rule with
+:data:`repro.analysis.lint.RULES`; add a module here (and import it below)
+to extend the catalog.  See ``docs/static_analysis.md`` for the catalog.
+"""
+from . import graph_rules      # noqa: F401  RINN001-007: topology & buckets
+from . import capacity_rules   # noqa: F401  RINN008-009, 011: FIFO sizing
+from . import stream_rules     # noqa: F401  RINN010: profile-stream config

@@ -1,0 +1,66 @@
+"""FIFO-capacity lint rules (RINN008, RINN009, RINN011).
+
+These need a timing profile: they compile the graph and run the static
+dataflow pass (lazily, once, via ``ctx.analysis``), then judge the
+*effective* capacity config — base ``fifo_capacity`` overlaid with any
+fault plan and remediation overrides.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from ..dataflow import VERDICT_DEADLOCK, effective_capacities
+from ..lint import ERROR, INFO, WARN, Finding, LintContext, make_finding, rule
+
+
+@rule("RINN008", ERROR, "capacity config statically guarantees deadlock",
+      needs=("timing",))
+def guaranteed_deadlock(ctx: LintContext) -> List[Finding]:
+    an = ctx.analysis
+    caps = effective_capacities(ctx.sim, ctx.faults, ctx.overrides)
+    if an.deadlock_verdict(caps) != VERDICT_DEADLOCK:
+        return []
+    out = [make_finding(
+        "RINN008", f"capacity {caps[e]} is below the static bound "
+        f"{b.capacity_lb} and a fork/merge cut is provably starved: the "
+        "run cannot complete", edge=e,
+        hint=f"grow to {b.capacity_lb} (seed run_with_remediation via "
+             "initial_overrides=static_sizing_plan(...).capacity_map())")
+        for e, b in an.bounds.items() if caps[e] < b.capacity_lb]
+    return out or [make_finding(
+        "RINN008", "capacity config is provably deadlocked",
+        hint="grow the undersized FIFOs to their static bounds")]
+
+
+@rule("RINN009", WARN, "capacity below the static schedule-preserving bound",
+      needs=("timing",))
+def below_static_bound(ctx: LintContext) -> List[Finding]:
+    an = ctx.analysis
+    caps = effective_capacities(ctx.sim, ctx.faults, ctx.overrides)
+    if an.deadlock_verdict(caps) == VERDICT_DEADLOCK:
+        return []  # RINN008 already escalated this config
+    return [make_finding(
+        "RINN009", f"capacity {caps[e]} < static bound {b.capacity_lb}: "
+        "backpressure will perturb the ideal schedule (deadlock not "
+        "provable, but throughput and saturation behavior change)", edge=e,
+        hint=f"grow to {b.capacity_lb} to preserve the unbounded schedule")
+        for e, b in an.bounds.items() if caps[e] < b.capacity_lb]
+
+
+@rule("RINN011", INFO, "uniformly over-provisioned FIFO capacities",
+      needs=("timing",))
+def overprovisioned(ctx: LintContext) -> List[Finding]:
+    an = ctx.analysis
+    caps = effective_capacities(ctx.sim, ctx.faults, ctx.overrides)
+    if not an.bounds:
+        return []
+    worst = max(b.capacity_lb for b in an.bounds.values())
+    floor = min(caps[e] for e in an.bounds)
+    if floor < 4 * worst + 1:
+        return []
+    return [make_finding(
+        "RINN011", f"every FIFO holds >= {floor} words but the deepest "
+        f"static requirement is {worst}: ~{floor - worst} words of BRAM "
+        "headroom per edge buy nothing",
+        hint=f"fifo_capacity={worst} replays the ideal schedule exactly "
+             "(see static_sizing_plan shrink advisories)")]

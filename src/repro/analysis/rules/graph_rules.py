@@ -1,0 +1,167 @@
+"""Topology and shape-bucket lint rules (RINN001-007).
+
+These need nothing beyond the graph itself — they run on every lint pass,
+including ones with no timing profile.  Reachability uses plain BFS rather
+than ``topo_order`` so a malformed (even cyclic) graph still lints instead
+of raising.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Dict, List, Set, Tuple
+
+from ..lint import ERROR, WARN, Finding, LintContext, make_finding, rule
+
+
+def _adjacency(graph) -> Tuple[Dict[str, List[str]], Dict[str, List[str]]]:
+    succs: Dict[str, List[str]] = {n: [] for n in graph.nodes}
+    preds: Dict[str, List[str]] = {n: [] for n in graph.nodes}
+    for (s, d) in graph.edges:
+        if s in succs and d in preds:
+            succs[s].append(d)
+            preds[d].append(s)
+    return succs, preds
+
+
+def _bfs(adj: Dict[str, List[str]], start: str) -> Set[str]:
+    seen: Set[str] = set()
+    frontier = [start]
+    while frontier:
+        n = frontier.pop()
+        if n in seen:
+            continue
+        seen.add(n)
+        frontier.extend(adj.get(n, ()))
+    return seen
+
+
+def _input_id(graph):
+    from repro.rinn.layers import InputSpec
+
+    for n, spec in graph.nodes.items():
+        if isinstance(spec, InputSpec):
+            return n
+    return None
+
+
+def _pow2_at_least(value: int, floor: int) -> int:
+    # mirrors repro.rinn.batchsim._pow2_at_least (the jit-cache bucketing)
+    return max(floor, 1 << max(0, value - 1).bit_length())
+
+
+@rule("RINN001", ERROR, "node unreachable from the input")
+def unreachable_node(ctx: LintContext) -> List[Finding]:
+    inp = _input_id(ctx.graph)
+    if inp is None:
+        return []
+    succs, _ = _adjacency(ctx.graph)
+    live = _bfs(succs, inp)
+    return [make_finding(
+        "RINN001", "not reachable from the input; it will never fire and "
+        "any merge it feeds deadlocks immediately", node=n,
+        hint="wire it below the input or delete it")
+        for n in ctx.graph.nodes if n not in live]
+
+
+@rule("RINN002", ERROR, "dead-end node that never reaches the output")
+def dead_end_node(ctx: LintContext) -> List[Finding]:
+    succs, preds = _adjacency(ctx.graph)
+    sinks = [n for n in ctx.graph.nodes if not succs[n]]
+    if not sinks:
+        return []
+    # the output head is the sink with the most ancestors; every other node
+    # must reach it or its stream is silently discarded
+    head = max(sinks, key=lambda n: (len(_bfs(
+        {k: v for k, v in preds.items()}, n)), list(ctx.graph.nodes).index(n)))
+    reaches = _bfs(preds, head)
+    return [make_finding(
+        "RINN002", f"stream terminates without reaching the output "
+        f"{head!r}; its beats are produced then silently dropped", node=n,
+        hint=f"route it into {head!r} or prune the dead subgraph")
+        for n in ctx.graph.nodes if n not in reaches]
+
+
+@rule("RINN003", ERROR, "duplicate edge")
+def duplicate_edge(ctx: LintContext) -> List[Finding]:
+    counts = Counter(tuple(e) for e in ctx.graph.edges)
+    return [make_finding(
+        "RINN003", f"edge appears {c} times; the consumer would pop the "
+        "same FIFO twice per firing", edge=e,
+        hint="merge the parallel edges (or insert an explicit clone)")
+        for e, c in counts.items() if c > 1]
+
+
+@rule("RINN004", ERROR, "self-loop edge")
+def self_loop(ctx: LintContext) -> List[Finding]:
+    return [make_finding(
+        "RINN004", "node feeds itself; a streaming actor can never satisfy "
+        "its own input and stalls forever", edge=(s, d),
+        hint="remove the loop — RINN graphs are DAGs")
+        for (s, d) in ctx.graph.edges if s == d]
+
+
+@rule("RINN005", WARN, "one merge inflates the MAX_IN shape bucket")
+def merge_fanin_bucket(ctx: LintContext) -> List[Finding]:
+    _, preds = _adjacency(ctx.graph)
+    indeg = {n: len(ps) for n, ps in preds.items()}
+    if not indeg:
+        return []
+    top = max(indeg.values())
+    widest = [n for n, d in indeg.items() if d == top]
+    if len(widest) != 1:
+        return []
+    rest = max([d for n, d in indeg.items() if n != widest[0]], default=1)
+    bucket, rest_bucket = _pow2_at_least(top, 2), _pow2_at_least(rest, 2)
+    if bucket <= rest_bucket:
+        return []
+    return [make_finding(
+        "RINN005", f"in-degree {top} pads every node's input slots to "
+        f"{bucket} (the rest of the graph fits {rest_bucket}), bloating the "
+        "compiled machine", node=widest[0],
+        hint="split the merge into a tree of narrower merges")]
+
+
+@rule("RINN006", WARN, "graph size just past a shape-bucket boundary")
+def bucket_boundary(ctx: LintContext) -> List[Finding]:
+    out: List[Finding] = []
+    for label, size, floor in (("nodes", len(ctx.graph.nodes), 8),
+                               ("edges", len(ctx.graph.edges), 8)):
+        bucket = _pow2_at_least(size, floor)
+        if size <= floor:
+            continue
+        prev = bucket // 2
+        over = size - prev
+        if 0 < over <= max(1, prev // 8):
+            waste = 100 * (bucket - size) // bucket
+            out.append(make_finding(
+                "RINN006", f"{size} {label} land {over} past the {prev} "
+                f"bucket boundary — the padded machine is {waste}% dummy "
+                f"slots", hint=f"trimming {over} {label} halves the padded "
+                f"{label[:-1]} dimension"))
+    return out
+
+
+@rule("RINN007", WARN, "sweep fragments the compile-once bucket cache",
+      needs=("sweep",))
+def sweep_fragmentation(ctx: LintContext) -> List[Finding]:
+    graphs = list(ctx.sweep)
+    if len(graphs) < 4:
+        return []
+    buckets = set()
+    for g in graphs:
+        succs, preds = _adjacency(g)
+        buckets.add((
+            _pow2_at_least(len(g.nodes), 8),
+            _pow2_at_least(len(g.edges), 8),
+            _pow2_at_least(max((len(p) for p in preds.values()),
+                               default=1), 2),
+            _pow2_at_least(max((len(s) for s in succs.values()),
+                               default=1), 2)))
+    if len(buckets) < len(graphs):
+        return []
+    return [make_finding(
+        "RINN007", f"all {len(graphs)} sweep graphs land in distinct shape "
+        "buckets — every run pays a fresh XLA compile; the batched vmap "
+        "path degenerates to per-graph execution",
+        hint="quantize the sweep axes (sizes, depths) so configs share "
+             "pow2 buckets")]

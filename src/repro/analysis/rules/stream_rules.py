@@ -1,0 +1,28 @@
+"""Profile-stream configuration lint rules (RINN010)."""
+from __future__ import annotations
+
+from typing import List
+
+from ..lint import WARN, Finding, LintContext, make_finding, rule
+
+
+@rule("RINN010", WARN, "mixed guard algorithms in one profile stream",
+      needs=("stream",))
+def guard_mode_mixing(ctx: LintContext) -> List[Finding]:
+    from repro.core.stream import INTEGRITY_METRIC
+
+    xor, crc = [], []
+    for label in ctx.stream.schema:
+        if label.metric != INTEGRITY_METRIC:
+            continue
+        # the guard label's size encodes the algorithm: [seq, fold] for
+        # xor24, [seq, lo16, hi16] for crc32
+        (crc if label.size >= 3 else xor).append(label.name)
+    if not xor or not crc:
+        return []
+    return [make_finding(
+        "RINN010", f"stream mixes xor24 ({len(xor)}) and crc32 "
+        f"({len(crc)}) guard records (first crc32: {crc[0]!r}); decodable, "
+        "but integrity strength is uneven and cross-run stream comparison "
+        "sees spurious schema diffs",
+        hint="pick one algo= for every append_guarded call on a stream")]

@@ -350,6 +350,13 @@ class CosimReport:
     # typed as object to keep repro.trace an optional, lazily-imported dep
     trace_ref: Optional[object] = None
     trace_prof: Optional[object] = None
+    # lint findings (repro.analysis.lint.Finding) when
+    # compare(static_check=True); same lazy-import convention as the traces
+    static_findings: List[object] = dataclasses.field(default_factory=list)
+
+    @property
+    def static_errors(self) -> List[object]:
+        return [f for f in self.static_findings if f.severity == "ERROR"]
 
     @property
     def n_signals(self) -> int:
@@ -395,15 +402,28 @@ def compare(graph: RinnGraph, timing: TimingProfile,
             auto_remediate: bool = False,
             remediation_budget: int = 6,
             trace: bool = False,
-            trace_windows: int = 256) -> CosimReport:
+            trace_windows: int = 256,
+            static_check: bool = False) -> CosimReport:
     """Run the unprofiled/profiled pair and emit the Table-I report.
 
     ``trace=True`` attaches window-aligned occupancy timelines
     (``report.trace_ref`` / ``report.trace_prof``, each a
     :class:`repro.trace.TraceStore`) captured in the same batched device
     program — both lanes share one stride, so the pair diffs cleanly.
+
+    ``static_check=True`` lints the design first
+    (:func:`repro.analysis.lint.run_lint` with this graph, timing, and
+    fault plan) and attaches the findings as ``report.static_findings``;
+    a statically-guaranteed deadlock surfaces there as a RINN008 ERROR
+    even when ``auto_remediate`` later sizes it away.
     """
     sim = compile_graph(graph, timing)
+    static_findings: List[object] = []
+    if static_check:
+        from repro.analysis.lint import run_lint
+
+        static_findings = run_lint(
+            graph, timing=timing, faults=faults).findings
     attempts: List[RemediationAttempt] = []
     capacities: Dict[Edge, int] = {}
     trace_ref = trace_prof = None
@@ -442,6 +462,7 @@ def compare(graph: RinnGraph, timing: TimingProfile,
         cycles_profiled=prof.cycles, completed=True, remediation=attempts,
         remediated_capacities=capacities,
         trace_ref=trace_ref, trace_prof=trace_prof,
+        static_findings=static_findings,
     )
 
 

@@ -81,6 +81,32 @@ class RinnGraph:
         return out
 
     def validate(self) -> None:
+        seen = set()
+        for (s, d) in self.edges:
+            if s == d:
+                raise ValueError(f"self-loop edge {s} -> {d}")
+            if s not in self.nodes or d not in self.nodes:
+                raise ValueError(f"edge {s} -> {d} references unknown node")
+            if (s, d) in seen:
+                raise ValueError(f"duplicate edge {s} -> {d}")
+            seen.add((s, d))
+        # every node must be fed (transitively) by the input, or it can
+        # never fire and any merge downstream of it deadlocks (checked
+        # before shapes(): an unfed node has no input shapes to infer)
+        inputs = [n for n, s in self.nodes.items()
+                  if isinstance(s, InputSpec)]
+        if not inputs:
+            raise ValueError("graph has no InputSpec node")
+        live, frontier = set(), inputs
+        while frontier:
+            n = frontier.pop()
+            if n in live:
+                continue
+            live.add(n)
+            frontier.extend(self.successors(n))
+        dead = [n for n in self.nodes if n not in live]
+        if dead:
+            raise ValueError(f"node(s) unreachable from input: {dead}")
         self.shapes()
         for nid, spec in self.nodes.items():
             n_in = len(self.predecessors(nid))

@@ -6,13 +6,22 @@ peak occupancy, mean occupancy, and time-at-full / time-at-empty
 fractions.  ``TraceDiff.regressions()`` applies thresholds so a benchmark
 can fail loudly when a FIFO got deeper or a stall fraction grew, and
 ``summary()`` prints the per-channel movement table.
+
+With ``window_level=True`` the diff additionally *localizes* each
+channel's movement on the time axis: the per-window columns are compared
+directly and every diverging window index is recorded, so a regression
+report can say "merge3's backlog departs from baseline in windows 12-17"
+instead of only "the peak grew".  Both traces must share a window size;
+otherwise the window axis is incomparable and localization is skipped.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
-from .store import ChannelStats, TraceStore
+import numpy as np
+
+from .store import _COLS, ChannelStats, TraceStore
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,6 +38,20 @@ class ChannelDelta:
     full_frac_b: float
     empty_frac_a: float
     empty_frac_b: float
+    # window-level localization (``diff_traces(..., window_level=True)``):
+    # indices of windows whose columns differ, over the shared prefix of
+    # the two time axes.  None when localization was not requested or the
+    # window sizes are incomparable.
+    windows: Optional[Tuple[int, ...]] = None
+
+    @property
+    def first_divergence(self) -> Optional[int]:
+        """First window where the timelines part ways, if localized."""
+        return self.windows[0] if self.windows else None
+
+    @property
+    def last_divergence(self) -> Optional[int]:
+        return self.windows[-1] if self.windows else None
 
     @property
     def peak_delta(self) -> float:
@@ -46,7 +69,16 @@ class ChannelDelta:
     def changed(self) -> bool:
         return (self.peak_delta != 0 or self.mean_delta != 0
                 or self.full_frac_delta != 0
-                or self.empty_frac_b != self.empty_frac_a)
+                or self.empty_frac_b != self.empty_frac_a
+                or bool(self.windows))
+
+    def locate(self) -> str:
+        """Human-readable span of the divergence, e.g. ``w12-17 (4)``."""
+        if not self.windows:
+            return ""
+        lo, hi = self.windows[0], self.windows[-1]
+        span = f"w{lo}" if lo == hi else f"w{lo}-{hi}"
+        return f"{span} ({len(self.windows)} window(s))"
 
 
 @dataclasses.dataclass
@@ -82,10 +114,12 @@ class TraceDiff:
             lines.append(f"  only in B: {', '.join(self.only_b)}")
         shown = [d for d in self.deltas if d.changed or not changed_only]
         for d in shown:
+            where = d.locate()
             lines.append(
                 f"{d.name:34s} peak {d.peak_a:g}->{d.peak_b:g} "
                 f"mean {d.mean_a:.2f}->{d.mean_b:.2f} "
-                f"full {d.full_frac_a:.1%}->{d.full_frac_b:.1%}")
+                f"full {d.full_frac_a:.1%}->{d.full_frac_b:.1%}"
+                + (f"  @ {where}" if where else ""))
         if not shown:
             lines.append("  (no per-channel movement)")
         return "\n".join(lines)
@@ -94,18 +128,47 @@ class TraceDiff:
         return self.summary()
 
 
-def diff_traces(a: TraceStore, b: TraceStore) -> TraceDiff:
-    """Compare two traces by channel name (order-independent)."""
+def _diverging_windows(a: TraceStore, b: TraceStore,
+                       shared: List[str]) -> Dict[str, Tuple[int, ...]]:
+    """Per shared channel: window indices (over the common prefix of the
+    time axes) where any of the five columns disagree."""
+    ia = {c.name: i for i, c in enumerate(a.channels)}
+    ib = {c.name: i for i, c in enumerate(b.channels)}
+    w = min(a.n_windows, b.n_windows)
+    if not w or not shared:
+        return {n: () for n in shared}
+    rows_a = np.array([ia[n] for n in shared])
+    rows_b = np.array([ib[n] for n in shared])
+    differ = np.zeros((len(shared), w), dtype=bool)
+    for col in _COLS:
+        differ |= (a.column(col)[rows_a, :w] != b.column(col)[rows_b, :w])
+    return {n: tuple(int(j) for j in np.flatnonzero(differ[i]))
+            for i, n in enumerate(shared)}
+
+
+def diff_traces(a: TraceStore, b: TraceStore, *,
+                window_level: bool = False) -> TraceDiff:
+    """Compare two traces by channel name (order-independent).
+
+    ``window_level=True`` also walks the time axis and records, per
+    channel, which windows diverge — see :meth:`ChannelDelta.locate`.
+    Requires both stores to use the same ``window_cycles``; mismatched
+    window sizes silently fall back to aggregate-only diffing.
+    """
     sa: Dict[str, ChannelStats] = a.stats_by_name()
     sb: Dict[str, ChannelStats] = b.stats_by_name()
     shared = [n for n in sa if n in sb]
+    located: Dict[str, Optional[Tuple[int, ...]]] = {n: None for n in shared}
+    if window_level and a.window_cycles == b.window_cycles:
+        located.update(_diverging_windows(a, b, shared))
     deltas = [
         ChannelDelta(
             name=n, kind=sa[n].kind,
             peak_a=sa[n].peak, peak_b=sb[n].peak,
             mean_a=sa[n].mean, mean_b=sb[n].mean,
             full_frac_a=sa[n].full_frac, full_frac_b=sb[n].full_frac,
-            empty_frac_a=sa[n].empty_frac, empty_frac_b=sb[n].empty_frac)
+            empty_frac_a=sa[n].empty_frac, empty_frac_b=sb[n].empty_frac,
+            windows=located[n])
         for n in shared
     ]
     return TraceDiff(
