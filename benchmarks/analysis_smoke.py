@@ -13,15 +13,24 @@ simulation*, then cross-validated against the dynamic run:
      pattern sweep (capacities pinned near the static bounds so saturation
      is non-trivial) — precision must be >= 0.8,
   4. verify the static completion-cycle prediction against the simulator
-     on every sweep design.
+     on every sweep design,
+  5. decide the full capacity grid (below-bound / at-bound / above-bound
+     per edge) across the fig5 sweep with the bounded-capacity model
+     checker — **zero ``unknown`` verdicts**, every ``safe`` verdict
+     confirmed at its exact completion cycle and every ``deadlock``
+     certificate replayed to its certified stall by the simulator,
+  6. synthesize exact Pareto-minimal capacities per design — never above
+     the conservative bound on any edge — and report the savings,
+  7. ``run_with_remediation(static_precheck=True)`` clears the
+     capacity-fault deadlock with zero ladder attempts and no seed.
 """
 from __future__ import annotations
 
 from typing import Dict
 
 from repro.analysis import (
-    analyze_sim, effective_capacities, grade_saturation, run_lint,
-    static_sizing_plan,
+    analyze_sim, effective_capacities, grade_decidability, grade_saturation,
+    run_lint, static_sizing_plan,
 )
 from repro.rinn import RinnConfig, ZCU102, compile_graph, generate_rinn
 from repro.rinn.cosim import run_with_remediation
@@ -54,8 +63,11 @@ def run() -> Dict:
     assert res.completed and attempts == [], (res.completed, attempts)
 
     # 3+4. grade predictions on the fig5 pattern sweep
+    # 5+6. decide the capacity grid + synthesize minimal capacities
     grades = []
     cycles_exact = 0
+    n_maps = n_undecided = n_unconfirmed = 0
+    minimal_words = conservative_words = total_replays = 0
     sweep = [RinnConfig(n_backbone=8, pattern=pat, image_size=8, seed=s)
              for pat in ("short_skip", "long_skip", "ends_only")
              for s in range(3)]
@@ -73,21 +85,65 @@ def run() -> Dict:
         grades.append(grade_saturation(
             san, store,
             capacities=effective_capacities(ssim, overrides=over)))
+
+        # the capacity grid: every verdict decided, every verdict confirmed
+        grid = {
+            "below": {e: max(1, lb - 1) for e, lb in lbs.items()},
+            "at": dict(lbs),
+            "above": {e: lb + 2 for e, lb in lbs.items()},
+            "mixed": over,
+        }
+        dg = grade_decidability(san, grid, confirm=True, max_cycles=50_000)
+        n_maps += len(dg.outcomes)
+        n_undecided += len(dg.undecided)
+        n_unconfirmed += len(dg.misdecided)
+        assert dg.decided_fraction == 1.0, dg.summary()
+        assert dg.confirmed_fraction == 1.0, dg.summary()
+
+        # exact minimal sizing: <= the conservative bound on every edge
+        splan = static_sizing_plan(san, exact=True)
+        assert all(splan.minimal[e] <= splan.conservative[e]
+                   for e in splan.minimal), splan.summary()
+        minimal_words += sum(splan.minimal.values())
+        conservative_words += sum(splan.conservative.values())
+        total_replays += splan.replays
     precision = min(g.precision for g in grades)
     recall = min(g.recall for g in grades)
     assert precision >= 0.8, precision
     assert cycles_exact == len(sweep), (cycles_exact, len(sweep))
+    assert n_undecided == 0 and n_unconfirmed == 0
     print(f"[analysis] sweep of {len(sweep)}: min precision {precision:.2f} "
           f"min recall {recall:.2f}; {cycles_exact} exact cycle predictions")
+    print(f"[analysis] capacity grid: {n_maps} map(s) decided, "
+          f"0 unknown, 0 unconfirmed; exact sizing {minimal_words} words "
+          f"vs {conservative_words} conservative "
+          f"({total_replays} replays)")
+
+    # 7. the checker-backed precheck clears the deadlock with no seed and
+    # no ladder: the undersized edge is pre-grown to a certified-safe map
+    res_pre, attempts_pre = run_with_remediation(
+        sim, profiled=True, max_cycles=50_000, faults=plan,
+        static_precheck=True)
+    assert res_pre.completed and attempts_pre == [], (
+        res_pre.completed, attempts_pre)
 
     return {
         "lint_errors": len(lint.errors),
         "flagged_edge": "->".join(hits[0].edge),
         "static_capacity_map": {"->".join(e): c for e, c in seed.items()},
         "seeded_attempts": len(attempts),
+        "precheck_attempts": len(attempts_pre),
         "sweep_designs": len(sweep),
         "min_precision": precision,
         "min_recall": recall,
         "exact_cycle_predictions": cycles_exact,
         "predicted_cycles": an.predicted_cycles,
+        "grid_maps": n_maps,
+        "grid_undecided": n_undecided,
+        "grid_unconfirmed": n_unconfirmed,
+        "decided_fraction": 1.0 if n_maps and not n_undecided else 0.0,
+        "minimal_words": minimal_words,
+        "conservative_words": conservative_words,
+        "capacity_words_saved": conservative_words - minimal_words,
+        "minimize_replays": total_replays,
     }

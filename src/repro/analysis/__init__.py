@@ -5,7 +5,11 @@ from .dataflow import (VERDICT_DEADLOCK, VERDICT_SAFE, VERDICT_UNKNOWN,
                        EdgeBound, NodeSchedule, StaticAnalysis,
                        ThroughputBound, analyze_graph, analyze_sim,
                        effective_capacities, static_sizing_plan)
+from .modelcheck import (CheckResult, DeadlockCertificate, ExactSizingPlan,
+                         WaitFor, bounded_replay, check_capacities,
+                         minimize_capacities)
 from .lint import (ERROR, INFO, RULES, SEVERITIES, WARN, Finding,
                    LintContext, LintReport, Rule, make_finding, rule,
                    run_lint)
-from .grade import EdgeOutcome, PredictionGrade, grade_saturation
+from .grade import (DecisionGrade, DecisionOutcome, EdgeOutcome,
+                    PredictionGrade, grade_decidability, grade_saturation)

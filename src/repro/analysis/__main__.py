@@ -9,6 +9,10 @@ finding fires — the CI ``analysis-gate`` entry point.
 ``--out`` writes it to a file (the CI artifact) while keeping the text
 report on stdout.  ``--demo-fault`` appends the known capacity-fault
 deadlock scenario so the ERROR path is demonstrable on demand.
+``--minimize`` adds the model checker's exact Pareto-minimal capacity
+plan per design (and enables the RINN013 loose-bound advisory);
+``--certificate`` attaches the replayable deadlock certificate to any
+design whose total verdict is ``deadlock``.
 """
 from __future__ import annotations
 
@@ -51,7 +55,9 @@ def suite_configs(demo_fault: bool) -> List[Tuple[str, RinnConfig,
 
 
 def run_suite(board, *, demo_fault: bool = False,
-              rules: Optional[List[str]] = None) -> Tuple[List[Dict], bool]:
+              rules: Optional[List[str]] = None,
+              minimize: bool = False,
+              certificate: bool = False) -> Tuple[List[Dict], bool]:
     """Lint every suite design; returns (per-design docs, any-error)."""
     docs: List[Dict] = []
     any_error = False
@@ -60,20 +66,40 @@ def run_suite(board, *, demo_fault: bool = False,
     for (name, cfg, faults), graph in zip(entries, graphs):
         analysis = analyze_graph(graph, board)
         report: LintReport = run_lint(graph, timing=board, faults=faults,
-                                      sweep=graphs, rules=rules)
+                                      sweep=graphs, rules=rules,
+                                      exact=minimize)
         any_error |= not report.ok
         bounds = analysis.capacity_lower_bounds()
-        docs.append({
+        decision = analysis.check(
+            effective_capacities(analysis.sim, faults))
+        doc = {
             "design": name,
             "predicted_cycles": analysis.predicted_cycles,
             "deepest_bound": max(bounds.values(), default=0),
-            "verdict": analysis.deadlock_verdict(
-                effective_capacities(analysis.sim, faults)),
+            "verdict": decision.verdict,
+            "decision_method": decision.method,
+            "completion_cycle": decision.completion_cycle,
             "ok": report.ok,
             "counts": {s: len(f) for s, f in report.by_severity().items()},
             "findings": [f.to_dict() for f in report.findings],
             "ran": report.ran, "skipped": report.skipped,
-        })
+        }
+        if certificate and decision.certificate is not None:
+            doc["certificate"] = decision.certificate.to_dict()
+        if minimize:
+            from .dataflow import static_sizing_plan
+
+            plan = static_sizing_plan(analysis, faults=faults, exact=True)
+            doc["minimize"] = {
+                "minimal_words": sum(plan.minimal.values()),
+                "conservative_words": sum(plan.conservative.values()),
+                "words_saved": plan.words_saved_vs_bound,
+                "best_ratio": plan.best_ratio,
+                "replays": plan.replays,
+                "minimal": {"->".join(e): c
+                            for e, c in sorted(plan.minimal.items())},
+            }
+        docs.append(doc)
     return docs, any_error
 
 
@@ -91,11 +117,19 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--demo-fault", action="store_true",
                     help="include the known capacity-fault deadlock design "
                          "(exercises the ERROR exit path)")
+    ap.add_argument("--minimize", action="store_true",
+                    help="synthesize exact Pareto-minimal FIFO capacities "
+                         "per design (model checker) and enable RINN013")
+    ap.add_argument("--certificate", action="store_true",
+                    help="attach the replayable deadlock certificate to "
+                         "deadlocked designs (JSON) / print it (text)")
     args = ap.parse_args(argv)
 
     rules = args.rules.split(",") if args.rules else None
     docs, any_error = run_suite(BOARDS[args.board],
-                                demo_fault=args.demo_fault, rules=rules)
+                                demo_fault=args.demo_fault, rules=rules,
+                                minimize=args.minimize,
+                                certificate=args.certificate)
     doc = {"ok": not any_error, "board": args.board, "designs": docs,
            "totals": {s: sum(d["counts"][s] for d in docs)
                       for s in ("ERROR", "WARN", "INFO")}}
@@ -117,6 +151,20 @@ def main(argv: Optional[List[str]] = None) -> int:
                 hint = f"  [fix: {f['hint']}]" if f.get("hint") else ""
                 print(f"  {f['severity']:5s} {f['rule']} {f['locus']}: "
                       f"{f['message']}{hint}")
+            if "certificate" in d:
+                c = d["certificate"]
+                hops = " ".join(
+                    f"{w['actor']} -[{w['kind']} {w['occupancy']}/"
+                    f"{w['capacity']}]->" for w in c["cycle"])
+                print(f"  certificate: fixpoint at cycle "
+                      f"{c['stall_cycle']}; blocking cycle: {hops} "
+                      f"{c['cycle'][0]['actor'] if c['cycle'] else ''}")
+            if "minimize" in d:
+                m = d["minimize"]
+                print(f"  minimize: {m['minimal_words']} words minimal vs "
+                      f"{m['conservative_words']} conservative "
+                      f"({m['words_saved']} saved, best ratio "
+                      f"{m['best_ratio']:.1f}x, {m['replays']} replays)")
         t = doc["totals"]
         print(f"-- {len(docs)} design(s): {t['ERROR']} error / "
               f"{t['WARN']} warn / {t['INFO']} info")

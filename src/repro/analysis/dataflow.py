@@ -33,10 +33,12 @@ dynamic measurement elsewhere in the repo:
     push is ever blocked, so the bounded run replays the unbounded schedule
     beat-for-beat and completes (the twin of
     :func:`repro.trace.recommend_capacities`);
-  * **deadlock verdicts** — ``safe`` when all capacities meet their bounds
-    (provably deadlock-free, by the replay argument), ``deadlock`` when a
-    fork/merge cut is provably starved (see :func:`deadlock_verdict`),
-    ``unknown`` otherwise;
+  * **deadlock verdicts** — a **total** decision: ``safe`` when all
+    capacities meet their bounds (the replay argument) and, for every other
+    map, an exact answer from the bounded-capacity model checker
+    (:mod:`repro.analysis.modelcheck`) — ``safe`` with the exact completion
+    cycle or ``deadlock`` with a replayable certificate.  ``unknown`` is
+    gone (the constant survives only for backward compatibility);
   * **throughput bound** — the predicted completion cycle and the actor
     whose busy span dominates it, with predicted-saturating edges ranked
     like :func:`repro.trace.attribute_bottlenecks`.
@@ -44,7 +46,6 @@ dynamic measurement elsewhere in the repo:
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -55,6 +56,9 @@ Edge = Tuple[str, str]
 
 VERDICT_SAFE = "safe"
 VERDICT_DEADLOCK = "deadlock"
+# The verdict space is total since the bounded-capacity model checker
+# (repro.analysis.modelcheck) landed; no code path returns "unknown" any
+# more.  The constant remains so downstream comparisons keep importing.
 VERDICT_UNKNOWN = "unknown"
 
 
@@ -220,6 +224,10 @@ class StaticAnalysis:
     schedules: Dict[str, NodeSchedule]
     bounds: Dict[Edge, EdgeBound]
     predicted_cycles: int
+    # memoized CheckResults keyed on (capacity items, profiled); minimize
+    # and lint both re-check the same maps, so decisions are paid once
+    _check_cache: Dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     # ------------------------------------------------------------------ #
     def capacity_lower_bounds(self) -> Dict[Edge, int]:
@@ -245,22 +253,46 @@ class StaticAnalysis:
             b.peak_cycle, b.edge))
 
     # ------------------------------------------------------------------ #
-    def deadlock_verdict(self, capacities: Dict[Edge, int]) -> str:
-        """Three-valued deadlock-freedom verdict for one capacity config.
+    def check(self, capacities: Dict[Edge, int], *,
+              profiled: bool = False) -> "CheckResult":
+        """Total deadlock decision for one capacity config, with evidence.
 
-        ``safe``     — every capacity meets its static bound, so no push is
-                       ever blocked: the run replays the unbounded schedule
-                       and provably completes.
-        ``deadlock`` — some merge is provably starved before its first
-                       firing (see :func:`_first_fire_deadlock`).
-        ``unknown``  — undersized FIFOs exist but neither proof applies.
+        Returns a :class:`repro.analysis.modelcheck.CheckResult`: always
+        ``safe`` (with the exact completion cycle) or ``deadlock`` (with a
+        replayable :class:`~repro.analysis.modelcheck.DeadlockCertificate`).
+        Capacities meeting every static bound are decided by the replay
+        argument without executing a cycle; everything else goes through
+        the exact bounded-capacity replay.  Results are memoized on the
+        analysis, so lint rules, sizing, and remediation share decisions.
         """
-        if all(capacities.get(e, 0) >= b.capacity_lb
-               for e, b in self.bounds.items()):
-            return VERDICT_SAFE
-        if _first_fire_deadlock(self.sim, capacities):
-            return VERDICT_DEADLOCK
-        return VERDICT_UNKNOWN
+        from .modelcheck import check_capacities
+
+        key = (tuple(sorted(
+            (e, int(capacities.get(e, self.sim.capacity)))
+            for e in self.sim.edge_list)), bool(profiled))
+        hit = self._check_cache.get(key)
+        if hit is None:
+            hit = check_capacities(self.sim, capacities,
+                                   profiled=profiled, analysis=self)
+            self._check_cache[key] = hit
+        return hit
+
+    def deadlock_verdict(self, capacities: Dict[Edge, int], *,
+                         profiled: bool = False) -> str:
+        """Total deadlock-freedom verdict for one capacity config.
+
+        ``safe``     — the run provably completes: either every capacity
+                       meets its static bound (replay argument) or the
+                       exact bounded replay finishes.
+        ``deadlock`` — the bounded replay reaches a no-progress fixpoint
+                       (a replayable certificate is available via
+                       :meth:`check`).
+
+        ``unknown`` is no longer a possible return value: the bounded
+        replay of :mod:`repro.analysis.modelcheck` terminates on every
+        capacity map, so the verdict is a total function.
+        """
+        return self.check(capacities, profiled=profiled).verdict
 
 
 def analyze_sim(sim: CompiledSim) -> StaticAnalysis:
@@ -431,6 +463,7 @@ def static_sizing_plan(
     faults: Optional[FaultPlan] = None,
     overrides: Optional[Dict[Edge, int]] = None,
     shrink: bool = True, overprovision_factor: int = 4,
+    exact: bool = False, profiled: bool = False,
 ) -> "SizingPlan":
     """A :class:`repro.trace.SizingPlan` derived purely from static bounds.
 
@@ -443,8 +476,21 @@ def static_sizing_plan(
     trace).  Generously over-provisioned edges get a ``shrink`` advisory
     down to their bound (+1 headroom), mirroring
     :func:`repro.trace.recommend_capacities`.
+
+    With ``exact=True`` the plan comes from the bounded-capacity model
+    checker instead (:func:`repro.analysis.modelcheck.minimize_capacities`):
+    a Pareto-minimal jointly-safe map, never above the static bound on any
+    edge and often well below it — the schedule-preserving bound pays for
+    zero backpressure, the minimal map only for completion.
     """
     from repro.trace.sizing import GROW, KEEP, SHRINK, SizingAdvice, SizingPlan
+
+    if exact:
+        from .modelcheck import minimize_capacities
+
+        return minimize_capacities(
+            analysis, faults=faults, overrides=overrides, profiled=profiled,
+            shrink=shrink, overprovision_factor=overprovision_factor)
 
     caps = effective_capacities(analysis.sim, faults, overrides)
     advice: List[SizingAdvice] = []

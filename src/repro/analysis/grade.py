@@ -152,3 +152,105 @@ def grade_saturation(
             static_peak=b.peak_backlog, observed_peak=st.peak,
             windows=windows))
     return PredictionGrade(outcomes=outcomes)
+
+
+# --------------------------------------------------------------------- #
+# decidability: how much of the capacity lattice gets a verdict
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class DecisionOutcome:
+    """One capacity map's verdict, and whether the simulator agrees."""
+
+    label: str
+    verdict: str              # "safe" | "deadlock" (never "unknown")
+    method: str               # how the checker decided
+    completion_cycle: Optional[int]
+    confirmed: Optional[bool]  # None when ground truth was not run
+
+    @property
+    def decided(self) -> bool:
+        return self.verdict in ("safe", "deadlock")
+
+
+@dataclasses.dataclass
+class DecisionGrade:
+    """Decided-fraction metric over a family of capacity maps.
+
+    Before the model checker this fraction measured how much of the
+    capacity lattice the static layer could call; with the total decision
+    procedure it is pinned at 1.0 and the interesting number becomes
+    ``confirmed_fraction`` — how many verdicts the simulator corroborates.
+    """
+
+    outcomes: List[DecisionOutcome]
+
+    @property
+    def decided_fraction(self) -> float:
+        if not self.outcomes:
+            return 1.0
+        return sum(o.decided for o in self.outcomes) / len(self.outcomes)
+
+    @property
+    def undecided(self) -> List[DecisionOutcome]:
+        return [o for o in self.outcomes if not o.decided]
+
+    @property
+    def confirmed_fraction(self) -> float:
+        checked = [o for o in self.outcomes if o.confirmed is not None]
+        if not checked:
+            return 1.0
+        return sum(bool(o.confirmed) for o in checked) / len(checked)
+
+    @property
+    def misdecided(self) -> List[DecisionOutcome]:
+        return [o for o in self.outcomes if o.confirmed is False]
+
+    def summary(self) -> str:
+        n = len(self.outcomes)
+        safe = sum(o.verdict == "safe" for o in self.outcomes)
+        lines = [f"# decidability grade — {n} map(s): {safe} safe / "
+                 f"{n - safe - len(self.undecided)} deadlock / "
+                 f"{len(self.undecided)} undecided; decided "
+                 f"{self.decided_fraction:.2f}, confirmed "
+                 f"{self.confirmed_fraction:.2f}"]
+        for o in self.misdecided + self.undecided:
+            lines.append(f"  !! {o.label}: {o.verdict} ({o.method}) "
+                         f"confirmed={o.confirmed}")
+        return "\n".join(lines)
+
+    def __str__(self) -> str:
+        return self.summary()
+
+
+def grade_decidability(
+    analysis: StaticAnalysis,
+    capacity_maps: Dict[str, Dict[Edge, int]], *,
+    profiled: bool = False, confirm: bool = False,
+    max_cycles: int = 200_000,
+) -> DecisionGrade:
+    """Run the total decision procedure over a labelled family of maps.
+
+    With ``confirm=True`` every verdict is checked against ``run_sim``
+    ground truth: a ``safe`` verdict must complete at exactly its predicted
+    cycle, a ``deadlock`` certificate must replay to the certified stall
+    (:meth:`~repro.analysis.modelcheck.DeadlockCertificate.confirm`).
+    """
+    from repro.rinn.streamsim import run_sim
+
+    outcomes: List[DecisionOutcome] = []
+    for label, caps in capacity_maps.items():
+        res = analysis.check(caps, profiled=profiled)
+        confirmed: Optional[bool] = None
+        if confirm:
+            if res.safe:
+                sim_res = run_sim(analysis.sim, profiled=profiled,
+                                  max_cycles=max_cycles,
+                                  capacity_overrides=dict(caps))
+                confirmed = (sim_res.completed
+                             and sim_res.cycles == res.completion_cycle)
+            else:
+                confirmed = res.certificate.confirm(analysis.sim)
+        outcomes.append(DecisionOutcome(
+            label=label, verdict=res.verdict, method=res.method,
+            completion_cycle=res.completion_cycle, confirmed=confirmed))
+    return DecisionGrade(outcomes=outcomes)

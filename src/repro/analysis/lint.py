@@ -71,9 +71,14 @@ class LintContext:
     stream: Optional["ProfileStream"] = None
     # sweep context: sibling configs a shape-bucket rule can compare against
     sweep: Optional[List["RinnGraph"]] = None
+    # opt-in for model-checker-backed rules (RINN013): the exact minimal
+    # plan costs bounded replays, so callers must ask for it
+    exact: Optional[bool] = None
 
     _sim: Optional[object] = dataclasses.field(default=None, repr=False)
     _analysis: Optional[object] = dataclasses.field(default=None, repr=False)
+    _minimal_plan: Optional[object] = dataclasses.field(default=None,
+                                                        repr=False)
 
     @property
     def sim(self):
@@ -92,6 +97,18 @@ class LintContext:
 
             self._analysis = analyze_sim(self.sim)
         return self._analysis
+
+    @property
+    def minimal_plan(self):
+        """The exact Pareto-minimal sizing plan
+        (:func:`repro.analysis.modelcheck.minimize_capacities`), computed
+        on first use against this context's faults and overrides."""
+        if self._minimal_plan is None:
+            from .modelcheck import minimize_capacities
+
+            self._minimal_plan = minimize_capacities(
+                self.analysis, faults=self.faults, overrides=self.overrides)
+        return self._minimal_plan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -195,18 +212,21 @@ class LintReport:
 
 
 def run_lint(graph, *, timing=None, faults=None, overrides=None,
-             stream=None, sweep=None,
+             stream=None, sweep=None, exact: Optional[bool] = None,
              rules: Optional[List[str]] = None) -> LintReport:
     """Evaluate every registered (applicable) rule against one design.
 
     ``rules`` restricts the pass to specific rule ids.  Rules whose
     ``needs`` the context cannot satisfy are recorded as skipped, not
-    errors — linting a bare graph is always possible.
+    errors — linting a bare graph is always possible.  ``exact=True``
+    opts in to model-checker-backed rules (RINN013), which spend bounded
+    replays computing the Pareto-minimal capacity plan.
     """
     from . import rules as _rules  # noqa: F401  (registers built-in rules)
 
     ctx = LintContext(graph=graph, timing=timing, faults=faults,
-                      overrides=overrides, stream=stream, sweep=sweep)
+                      overrides=overrides, stream=stream, sweep=sweep,
+                      exact=exact or None)
     wanted = rules or sorted(RULES)
     findings: List[Finding] = []
     ran: List[str] = []

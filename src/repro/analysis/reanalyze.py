@@ -10,11 +10,11 @@ from pathlib import Path
 from repro.analysis.hlo import analyze_hlo
 
 
-def main():
-    art_dir = Path(sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun")
+def main(argv=None):
+    args = sys.argv[1:] if argv is None else list(argv)
+    art_dir = Path(args[0] if args else "artifacts/dryrun")
     n = 0
     for j in sorted(art_dir.glob("*.json")):
-        hlo = j.with_suffix("").with_suffix("")  # strip .json
         hlo = art_dir / (j.stem + ".hlo.txt.gz")
         if not hlo.exists():
             continue
@@ -36,6 +36,7 @@ def main():
         print(f"re-analyzed {j.name}: flops={parsed.flops:.3e} "
               f"mem={parsed.memory_bytes:.3e}")
     print(f"done: {n} artifacts updated")
+    return n
 
 
 if __name__ == "__main__":

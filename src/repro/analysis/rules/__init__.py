@@ -3,5 +3,5 @@
 to extend the catalog.  See ``docs/static_analysis.md`` for the catalog.
 """
 from . import graph_rules      # noqa: F401  RINN001-007: topology & buckets
-from . import capacity_rules   # noqa: F401  RINN008-009, 011: FIFO sizing
+from . import capacity_rules   # noqa: F401  RINN008-009, 011-013: FIFO sizing
 from . import stream_rules     # noqa: F401  RINN010: profile-stream config

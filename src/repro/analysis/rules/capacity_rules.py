@@ -1,15 +1,20 @@
-"""FIFO-capacity lint rules (RINN008, RINN009, RINN011).
+"""FIFO-capacity lint rules (RINN008, RINN009, RINN011-013).
 
 These need a timing profile: they compile the graph and run the static
 dataflow pass (lazily, once, via ``ctx.analysis``), then judge the
 *effective* capacity config — base ``fifo_capacity`` overlaid with any
-fault plan and remediation overrides.
+fault plan and remediation overrides.  Since the bounded-capacity model
+checker landed, the judgement is **total**: RINN008 and RINN009 split
+every config between them (provably-deadlocked vs merely
+schedule-perturbing), and RINN008 findings cite the replayable deadlock
+certificate — the blocking cycle and the stall fixpoint — not just the
+violated bound.
 """
 from __future__ import annotations
 
 from typing import List
 
-from ..dataflow import VERDICT_DEADLOCK, effective_capacities
+from ..dataflow import effective_capacities
 from ..lint import ERROR, INFO, WARN, Finding, LintContext, make_finding, rule
 
 
@@ -18,17 +23,23 @@ from ..lint import ERROR, INFO, WARN, Finding, LintContext, make_finding, rule
 def guaranteed_deadlock(ctx: LintContext) -> List[Finding]:
     an = ctx.analysis
     caps = effective_capacities(ctx.sim, ctx.faults, ctx.overrides)
-    if an.deadlock_verdict(caps) != VERDICT_DEADLOCK:
+    decision = an.check(caps)
+    if decision.safe:
         return []
+    cert = decision.certificate
     out = [make_finding(
         "RINN008", f"capacity {caps[e]} is below the static bound "
-        f"{b.capacity_lb} and a fork/merge cut is provably starved: the "
-        "run cannot complete", edge=e,
+        f"{b.capacity_lb} and the model checker proves the run cannot "
+        f"complete: replay reaches a permanent fixpoint at cycle "
+        f"{cert.stall_cycle} with blocking cycle {cert.cycle_str()}",
+        edge=e,
         hint=f"grow to {b.capacity_lb} (seed run_with_remediation via "
-             "initial_overrides=static_sizing_plan(...).capacity_map())")
+             "initial_overrides=static_sizing_plan(...).capacity_map(), "
+             "or pass static_precheck=True)")
         for e, b in an.bounds.items() if caps[e] < b.capacity_lb]
     return out or [make_finding(
-        "RINN008", "capacity config is provably deadlocked",
+        "RINN008", "capacity config is provably deadlocked: replay "
+        f"stalls at cycle {cert.stall_cycle} on {cert.cycle_str()}",
         hint="grow the undersized FIFOs to their static bounds")]
 
 
@@ -37,12 +48,15 @@ def guaranteed_deadlock(ctx: LintContext) -> List[Finding]:
 def below_static_bound(ctx: LintContext) -> List[Finding]:
     an = ctx.analysis
     caps = effective_capacities(ctx.sim, ctx.faults, ctx.overrides)
-    if an.deadlock_verdict(caps) == VERDICT_DEADLOCK:
+    decision = an.check(caps)
+    if not decision.safe:
         return []  # RINN008 already escalated this config
     return [make_finding(
         "RINN009", f"capacity {caps[e]} < static bound {b.capacity_lb}: "
-        "backpressure will perturb the ideal schedule (deadlock not "
-        "provable, but throughput and saturation behavior change)", edge=e,
+        "backpressure perturbs the ideal schedule (the model checker "
+        f"proves completion — at cycle {decision.completion_cycle} vs "
+        f"{an.predicted_cycles} unbounded — but throughput and "
+        "saturation behavior change)", edge=e,
         hint=f"grow to {b.capacity_lb} to preserve the unbounded schedule")
         for e, b in an.bounds.items() if caps[e] < b.capacity_lb]
 
@@ -64,3 +78,62 @@ def overprovisioned(ctx: LintContext) -> List[Finding]:
         "headroom per edge buy nothing",
         hint=f"fifo_capacity={worst} replays the ideal schedule exactly "
              "(see static_sizing_plan shrink advisories)")]
+
+
+@rule("RINN012", WARN, "capacity override for an edge not in the graph")
+def dangling_capacity_override(ctx: LintContext) -> List[Finding]:
+    """Override maps and ``CapacityFault``s keyed on edges the graph does
+    not have are silently ignored by ``effective_capacities`` and the
+    simulator — almost always a typo or a stale edge name after a graph
+    edit, and the intended FIFO keeps its old size."""
+    edges = set(ctx.graph.edges)
+    nodes = set(ctx.graph.nodes)
+    out: List[Finding] = []
+
+    def flag(e, source: str):
+        src, dst = e
+        if src in nodes and dst in nodes:
+            near = [c for c in edges if c[0] == src or c[1] == dst]
+            hint = ("did you mean " + " or ".join(
+                "->".join(c) for c in sorted(near)[:3]) + "?") if near \
+                else "remove the entry"
+        else:
+            missing = [n for n in (src, dst) if n not in nodes]
+            hint = (f"node(s) {', '.join(missing)} do not exist — "
+                    "remove the entry or fix the node name")
+        out.append(make_finding(
+            "RINN012", f"{source} references edge "
+            f"{'->'.join(e)} which is not in the graph: the entry is "
+            "silently ignored and the intended FIFO keeps its configured "
+            "capacity", edge=e, hint=hint))
+
+    for e in (ctx.overrides or {}):
+        if tuple(e) not in edges:
+            flag(tuple(e), "capacity override map")
+    for cf in (ctx.faults.capacities if ctx.faults else ()):
+        if tuple(cf.edge) not in edges:
+            flag(tuple(cf.edge), "CapacityFault in the fault plan")
+    return out
+
+
+@rule("RINN013", WARN, "conservative capacity bound far above exact minimum",
+      needs=("timing", "exact"))
+def conservative_bound_loose(ctx: LintContext) -> List[Finding]:
+    """The schedule-preserving bound buys zero backpressure; completion
+    alone is often much cheaper.  When the model checker's Pareto-minimal
+    capacity beats the conservative bound by >= 2x on an edge, sizing BRAM
+    from the bound alone leaves real area on the table."""
+    plan = ctx.minimal_plan
+    out: List[Finding] = []
+    for e in sorted(plan.minimal):
+        lo, hi = plan.minimal[e], plan.conservative[e]
+        if hi >= 2 * lo:
+            out.append(make_finding(
+                "RINN013", f"schedule-preserving bound {hi} is "
+                f"{hi / lo:.1f}x the exact minimal capacity {lo} "
+                "(model-checked: the run still completes, trading "
+                "backpressure for BRAM)", edge=e,
+                hint=f"size to {lo} words via "
+                     "static_sizing_plan(exact=True) if schedule "
+                     "preservation is not required"))
+    return out

@@ -9,7 +9,6 @@ allocation).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional, Tuple
 
 import jax.numpy as jnp

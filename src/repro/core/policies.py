@@ -16,7 +16,7 @@ so policies can be compared quantitatively (benchmarks/fig3_overhead.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

@@ -16,7 +16,7 @@ identical to the inline policy.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,6 @@ against the unpipelined layer stack in tests/test_pipeline.py.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

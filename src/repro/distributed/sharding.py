@@ -18,7 +18,7 @@ ablation); ``fsdp_pod`` extends FSDP across pods (DCN all-gathers).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

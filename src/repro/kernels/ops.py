@@ -9,7 +9,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from .flash_attention import flash_attention
 from .moe_dispatch import moe_dispatch

@@ -9,7 +9,7 @@ DCN; everything else stays inside a pod's ICI).
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 

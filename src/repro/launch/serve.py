@@ -17,7 +17,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.core import ProfileCollector, ProfileStream, metrics as M
@@ -25,9 +24,7 @@ from repro.distributed.fault import (
     ProfilingSupervisor, RetryPolicy, Watchdog, retry_with_backoff,
 )
 from repro.models import init_params
-from repro.models.api import (
-    decode_fn, init_caches, make_batch, model_specs, prefill_fn,
-)
+from repro.models.api import init_caches, model_specs, prefill_fn
 from repro.train.step import make_serve_step
 
 

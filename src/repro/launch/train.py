@@ -11,20 +11,16 @@ Example (CPU, ~1 minute):
 from __future__ import annotations
 
 import argparse
-import json
 import time
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.core import ProfileCollector
 from repro.data.pipeline import DataConfig, Prefetcher
-from repro.distributed import (
-    activation_sharding, batch_shardings, default_rules, param_shardings,
-)
+from repro.distributed import (activation_sharding, default_rules, param_shardings)
 from repro.distributed.fault import (
     FaultTolerantLoop, Heartbeats, PreemptionGuard, ProfilingSupervisor,
     RetryPolicy, Watchdog, retry_with_backoff,

@@ -5,13 +5,12 @@ through these five functions; the family switch lives here only.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
 from . import encdec, hybrid, transformer
-from .transformer import KvCaches
 
 
 def model_specs(cfg):

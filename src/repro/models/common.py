@@ -1,7 +1,7 @@
 """Shared model components: norms, rotary embeddings, activation helpers."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import Label, TapeSpec
-from .attention import attention, decode_attention, naive_attention
+from .attention import attention, decode_attention
 from .common import apply_rotary, rms_norm
 from .mlp import mlp_apply, mlp_specs
 from .params import ParamSpec

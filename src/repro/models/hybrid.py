@@ -14,12 +14,11 @@ runnable (DESIGN.md §8).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from ..core import Label, TapeSpec
 from .attention import attention, decode_attention
 from .common import apply_rotary, rms_norm
 from .mlp import mlp_apply, mlp_specs

@@ -15,7 +15,6 @@ mirroring Megatron's Mamba TP.
 """
 from __future__ import annotations
 
-import math
 from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax

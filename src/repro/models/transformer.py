@@ -10,9 +10,7 @@ overhead baselines (benchmarks/fig3).
 """
 from __future__ import annotations
 
-import functools
-import math
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +21,7 @@ from .attention import attention, decode_attention
 from ..distributed.ctx import shard_act
 from .common import apply_rotary, rms_norm
 from .mlp import mlp_apply, mlp_specs
-from .moe import capacity_for, moe_apply, moe_specs
+from .moe import moe_apply, moe_specs
 from .params import ParamSpec
 from .ssm import (
     SsmCache, ssm_block_apply, ssm_block_decode, ssm_cache_init, ssm_specs,

@@ -7,8 +7,7 @@ the standard mixed-precision large-model recipe.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,7 @@ MNIST-shaped data — the weights only need to be realistic, not accurate).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from ..core import ProfileStream, metrics
 from ..core.policies import DagNode, ProfiledDag, plan_routing
 from .graphgen import RinnGraph
-from .layers import CloneSpec, InputSpec
+from .layers import InputSpec
 
 RECORD_METRICS = ("act_absmax", "act_rms")
 RECORD_SIZE = len(RECORD_METRICS)

@@ -193,11 +193,41 @@ def _ladder_overrides(ever_full, bound, base_cap, growth: int,
             for e in ever_full}
 
 
+def _statically_safe_seed(
+    sim: CompiledSim, *, faults: Optional[FaultPlan],
+    seed: Dict[Edge, int], profiled: bool) -> Dict[Edge, int]:
+    """Upgrade ``seed`` so the configured capacity map is checker-safe.
+
+    Decides the effective map with the exact model checker; on a
+    ``deadlock`` verdict, grows the undersized edges to the static bounds
+    and — if profiling interference defeats even those (rare; the replay
+    argument only covers the unprofiled schedule) — to the demand bounds,
+    which remove backpressure outright.  Every escalation is re-checked,
+    so the returned seed is certified safe before any simulator launch.
+    """
+    from repro.analysis.dataflow import analyze_sim, effective_capacities
+
+    analysis = analyze_sim(sim)
+    caps = effective_capacities(sim, faults, seed)
+    if analysis.check(caps, profiled=profiled).safe:
+        return seed
+    node_of = {nid: i for i, nid in enumerate(sim.node_ids)}
+    lb = analysis.capacity_lower_bounds()
+    grown = {e: max(caps[e], lb[e]) for e in sim.edge_list}
+    if not analysis.check(grown, profiled=profiled).safe:
+        grown = {e: max(grown[e], int(sim.total_out[node_of[e[0]]]))
+                 for e in sim.edge_list}
+    out = dict(seed)
+    out.update({e: v for e, v in grown.items() if v > caps[e]})
+    return out
+
+
 def run_with_remediation(
     sim: CompiledSim, *, profiled: bool = False, max_cycles: int = 200_000,
     faults: Optional[FaultPlan] = None, budget: int = 6, growth: int = 2,
     speculative: bool = True,
     initial_overrides: Optional[Dict[Edge, int]] = None,
+    static_precheck: bool = False,
 ) -> Tuple[SimResult, List[RemediationAttempt]]:
     """Run; on a capacity-induced deadlock, grow the full FIFOs and retry.
 
@@ -213,6 +243,15 @@ def run_with_remediation(
     geometric ladder is never invoked.  Seeded capacities become the new
     base the ladder grows from if they turn out to be insufficient.
 
+    ``static_precheck=True`` decides the configured capacity map with the
+    bounded-capacity model checker *before* launching anything
+    (:meth:`repro.analysis.dataflow.StaticAnalysis.check` — a total
+    verdict, never ``unknown``).  A ``deadlock`` verdict pre-grows the
+    undersized edges to a checker-certified safe map, so the first (and
+    only) simulator launch completes and the reactive ladder is skipped
+    entirely: zero attempts, zero wasted deadlocked runs.  A ``safe``
+    verdict launches unchanged, knowing no ladder will be needed.
+
     ``speculative=True`` (default) runs the *whole remaining capacity
     ladder* as one vmapped batch per diagnosis instead of one serial run
     per rung, then walks the rungs in order, re-speculating only when a new
@@ -222,6 +261,9 @@ def run_with_remediation(
     """
     bound, base_cap, in_of = _remediation_bounds(sim, faults)
     seed = dict(initial_overrides or {})
+    if static_precheck:
+        seed = _statically_safe_seed(sim, faults=faults, seed=seed,
+                                     profiled=profiled)
     base_cap.update(seed)
 
     ever_full: set = set()
@@ -353,6 +395,11 @@ class CosimReport:
     # lint findings (repro.analysis.lint.Finding) when
     # compare(static_check=True); same lazy-import convention as the traces
     static_findings: List[object] = dataclasses.field(default_factory=list)
+    # total model-checker verdict on the configured capacities, and its
+    # evidence: a repro.analysis.modelcheck.DeadlockCertificate when the
+    # verdict is "deadlock" (compare(static_check=True) only)
+    static_verdict: Optional[str] = None
+    static_certificate: Optional[object] = None
 
     @property
     def static_errors(self) -> List[object]:
@@ -413,17 +460,28 @@ def compare(graph: RinnGraph, timing: TimingProfile,
 
     ``static_check=True`` lints the design first
     (:func:`repro.analysis.lint.run_lint` with this graph, timing, and
-    fault plan) and attaches the findings as ``report.static_findings``;
-    a statically-guaranteed deadlock surfaces there as a RINN008 ERROR
-    even when ``auto_remediate`` later sizes it away.
+    fault plan), attaches the findings as ``report.static_findings``, and
+    additionally decides the configured capacity map with the exact model
+    checker — ``report.static_verdict`` is always ``"safe"`` or
+    ``"deadlock"``, and a deadlock verdict carries its replayable
+    :class:`~repro.analysis.modelcheck.DeadlockCertificate` as
+    ``report.static_certificate`` — even when ``auto_remediate`` then
+    sizes the deadlock away (a RINN008 ERROR also cites the certificate).
     """
     sim = compile_graph(graph, timing)
     static_findings: List[object] = []
+    static_verdict: Optional[str] = None
+    static_certificate: Optional[object] = None
     if static_check:
+        from repro.analysis.dataflow import analyze_sim, effective_capacities
         from repro.analysis.lint import run_lint
 
         static_findings = run_lint(
             graph, timing=timing, faults=faults).findings
+        analysis = analyze_sim(sim)
+        decision = analysis.check(effective_capacities(sim, faults, None))
+        static_verdict = decision.verdict
+        static_certificate = decision.certificate
     attempts: List[RemediationAttempt] = []
     capacities: Dict[Edge, int] = {}
     trace_ref = trace_prof = None
@@ -463,6 +521,8 @@ def compare(graph: RinnGraph, timing: TimingProfile,
         remediated_capacities=capacities,
         trace_ref=trace_ref, trace_prof=trace_prof,
         static_findings=static_findings,
+        static_verdict=static_verdict,
+        static_certificate=static_certificate,
     )
 
 

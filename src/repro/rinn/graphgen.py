@@ -18,15 +18,11 @@ Everything is seeded and deterministic.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 
-from .layers import (
-    AddSpec, CloneSpec, ConcatSpec, Conv2DSpec, DenseSpec, FlattenSpec,
-    InputSpec, LayerSpec, ReluSpec, ReshapeSpec, SigmoidSpec, Shape,
-)
+from .layers import (AddSpec, CloneSpec, ConcatSpec, Conv2DSpec, DenseSpec, FlattenSpec, InputSpec, LayerSpec, ReshapeSpec, Shape)
 
 PATTERNS = ("density", "short_skip", "long_skip", "ends_only")
 

@@ -38,10 +38,7 @@ import numpy as np
 
 from .graphgen import RinnGraph
 from .hls import TimingProfile
-from .layers import (
-    AddSpec, CloneSpec, ConcatSpec, Conv2DSpec, DenseSpec, FlattenSpec,
-    InputSpec, ReluSpec, ReshapeSpec, SigmoidSpec, beats_for_shape,
-)
+from .layers import AddSpec, DenseSpec, InputSpec, beats_for_shape
 
 
 @dataclasses.dataclass

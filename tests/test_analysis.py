@@ -1,7 +1,6 @@
 """Static dataflow analysis + lint framework (repro.analysis)."""
 import json
 
-import numpy as np
 import pytest
 from _hypothesis_shim import given, settings, st
 
@@ -9,9 +8,7 @@ from repro.analysis import (
     ERROR, RULES, VERDICT_DEADLOCK, VERDICT_SAFE, analyze_graph, analyze_sim,
     effective_capacities, grade_saturation, run_lint, static_sizing_plan,
 )
-from repro.rinn import (
-    RinnConfig, RinnGraph, ZCU102, compile_graph, generate_rinn, run_sim,
-)
+from repro.rinn import (RinnConfig, ZCU102, compile_graph, generate_rinn, run_sim)
 from repro.rinn.cosim import compare, run_with_remediation
 from repro.rinn.layers import ReluSpec
 from repro.rinn.streamsim import CapacityFault, FaultPlan

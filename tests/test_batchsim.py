@@ -6,7 +6,6 @@ results, compile-cache hits across fault plans / capacity overrides /
 remediation matching the serial loop, the shared-capacity ``compare``
 fix, multi-machine bucketed sweeps, and critical-path fault biasing.
 """
-import numpy as np
 import pytest
 
 from repro.rinn import (

@@ -2,9 +2,7 @@
 import subprocess
 import sys
 import textwrap
-from pathlib import Path
 
-import pytest
 
 SCRIPT = textwrap.dedent("""
     import os

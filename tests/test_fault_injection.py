@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import IntegrityReport, ProfileCollector, ProfileStream
+from repro.core import ProfileCollector, ProfileStream
 from repro.core.codec import word_checksum
 from repro.distributed.fault import (
     ProfilingSupervisor, RetryPolicy, Watchdog, retry_with_backoff,

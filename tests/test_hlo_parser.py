@@ -1,12 +1,9 @@
 """Unit tests for the HLO cost parser (the roofline's source of truth)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.analysis.hlo import (
-    COLLECTIVE_KINDS, _shape_bytes, analyze_hlo, parse_computations,
-)
+from repro.analysis.hlo import _shape_bytes, analyze_hlo, parse_computations
 
 
 def compile_text(fn, *args):
@@ -84,7 +81,6 @@ def test_scanned_weights_not_charged_in_full_per_iteration():
 
 
 def test_collective_bytes_per_kind():
-    import os
     if jax.device_count() < 4:
         pytest.skip("needs >= 4 devices")
 

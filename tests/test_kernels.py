@@ -138,7 +138,7 @@ def test_ssd_state_passing_matches_reference(b, nc, h, p, n, hb):
 
 def test_ssd_state_passing_composes_with_model_ssd():
     """Kernel output plugs into the chunked SSD exactly like the lax.scan."""
-    from repro.models.ssm import ssd_chunked, ssd_reference
+    from repro.models.ssm import ssd_reference
     b, t, h, p, n, chunk = 1, 32, 4, 8, 4, 8
     x = rnd(2, b, t, h, p)
     dt = jax.nn.softplus(rnd(3, b, t, h))

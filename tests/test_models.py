@@ -12,10 +12,7 @@ from repro.models.attention import (
 )
 from repro.models.moe import capacity_for, moe_apply, moe_specs
 from repro.models.ssm import ssd_chunked, ssd_reference
-from repro.models.transformer import (
-    assemble_stream, kv_cache_init, lm_decode_step, lm_loss, lm_prefill,
-    lm_specs, ssm_caches_init,
-)
+from repro.models.transformer import (assemble_stream, kv_cache_init, lm_decode_step, lm_loss, lm_specs, ssm_caches_init)
 
 
 def rand(key, *shape, dtype=jnp.float32):
@@ -187,7 +184,6 @@ def test_decode_matches_prefill_logits(family, extra):
     from repro.models.transformer import lm_hidden, lm_logits
     positions = jnp.arange(T)[None, :]
     h, _, _ = lm_hidden(cfg, params, toks, positions)
-    from repro.models.common import rms_norm  # final norm already applied
     full_logits = lm_logits(cfg, params, h)
 
     # token-by-token decode

@@ -1,0 +1,66 @@
+"""Round-trip test for repro.analysis.reanalyze.
+
+The re-analysis pass must (a) parse the gzipped HLO sibling of every
+status-ok dry-run artifact, (b) write the parsed costs back under the
+``parsed`` key without clobbering the rest of the document, and (c) skip
+failed runs and artifacts whose HLO text is missing.
+"""
+import gzip
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo import analyze_hlo
+from repro.analysis.reanalyze import main
+
+PARSED_KEYS = {"flops", "memory_bytes", "collective_bytes",
+               "collective_ops", "while_trip_counts", "n_computations"}
+
+
+def _write_artifact(art_dir, stem, *, status="ok", hlo_text=None, extra=None):
+    doc = {"status": status, "design": stem}
+    doc.update(extra or {})
+    (art_dir / f"{stem}.json").write_text(json.dumps(doc))
+    if hlo_text is not None:
+        with gzip.open(art_dir / f"{stem}.hlo.txt.gz", "wt") as f:
+            f.write(hlo_text)
+
+
+def test_reanalyze_round_trip(tmp_path):
+    a = jnp.zeros((8, 16), jnp.float32)
+    b = jnp.zeros((16, 32), jnp.float32)
+    hlo = jax.jit(lambda a, b: a @ b).lower(a, b).compile().as_text()
+
+    _write_artifact(tmp_path, "ok_run", hlo_text=hlo,
+                    extra={"wall_s": 1.5})
+    _write_artifact(tmp_path, "failed_run", status="compile_error",
+                    hlo_text=hlo)
+    _write_artifact(tmp_path, "no_hlo_run")
+
+    assert main([str(tmp_path)]) == 1
+
+    d = json.loads((tmp_path / "ok_run.json").read_text())
+    assert set(d["parsed"]) == PARSED_KEYS
+    assert d["parsed"]["flops"] == analyze_hlo(hlo).flops == 2 * 8 * 16 * 32
+    assert d["parsed"]["n_computations"] >= 1
+    # pre-existing fields survive the rewrite
+    assert d["wall_s"] == 1.5 and d["status"] == "ok"
+
+    # skipped artifacts are untouched: no parsed key appears
+    assert "parsed" not in json.loads((tmp_path / "failed_run.json").read_text())
+    assert "parsed" not in json.loads((tmp_path / "no_hlo_run.json").read_text())
+
+
+def test_reanalyze_is_idempotent(tmp_path):
+    x = jnp.zeros((4, 4), jnp.float32)
+    hlo = jax.jit(lambda x: jnp.sum(x * 2)).lower(x).compile().as_text()
+    _write_artifact(tmp_path, "run", hlo_text=hlo)
+    assert main([str(tmp_path)]) == 1
+    first = json.loads((tmp_path / "run.json").read_text())
+    assert main([str(tmp_path)]) == 1
+    assert json.loads((tmp_path / "run.json").read_text()) == first
+
+
+def test_reanalyze_empty_dir(tmp_path):
+    assert main([str(tmp_path)]) == 0

@@ -4,11 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.rinn import (
-    AvgPool2DSpec, CloneSpec, Conv2DSpec, DenseSpec, DepthwiseConv2DSpec,
-    FlattenSpec, InputSpec, MaxPool2DSpec, ReshapeSpec, RinnGraph, ZCU102,
-    compile_graph, cosim_only, run_sim,
-)
+from repro.rinn import (AvgPool2DSpec, Conv2DSpec, DenseSpec, DepthwiseConv2DSpec, FlattenSpec, InputSpec, MaxPool2DSpec, ReshapeSpec, RinnGraph, ZCU102, cosim_only)
 from repro.rinn.graphgen import RinnGraph
 
 

@@ -1,11 +1,7 @@
 """Streaming-simulator tests: the paper's §III claims, mechanistically."""
-import numpy as np
 import pytest
 
-from repro.rinn import (
-    PYNQ_Z2, RinnConfig, TimingProfile, ZCU102, compare, compile_graph,
-    cosim_only, generate_rinn, run_sim,
-)
+from repro.rinn import (PYNQ_Z2, RinnConfig, ZCU102, compare, compile_graph, cosim_only, generate_rinn, run_sim)
 
 
 def cfg(**kw):

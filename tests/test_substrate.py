@@ -1,8 +1,6 @@
 """Substrate tests: checkpointing, fault tolerance, data pipeline, optimizer."""
 import json
 import os
-import shutil
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -10,7 +8,7 @@ import numpy as np
 import pytest
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.data.pipeline import DataConfig, Prefetcher, host_slice, synth_batch
+from repro.data.pipeline import DataConfig, Prefetcher, synth_batch
 from repro.distributed.checkpoint import (
     latest_step, restore_checkpoint, save_checkpoint,
 )

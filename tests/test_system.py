@@ -5,8 +5,6 @@ production trainer (train -> crash -> resume bit-exactness of the data
 stream), serving, and the dry-run machinery at host scale.
 """
 import json
-import subprocess
-import sys
 from pathlib import Path
 
 import jax
